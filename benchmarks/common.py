@@ -1,0 +1,51 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+from repro.configs.base import (BASELINE_POLICY, CommRandPolicy, GNNConfig,
+                                TrainConfig)
+from repro.core.reorder import prepare
+from repro.graphs import synthetic
+
+POLICIES = {
+    "RAND-ROOTS/p0.5": BASELINE_POLICY,
+    "NORAND-ROOTS/p1.0": CommRandPolicy("norand", 0.0, 1.0),
+    "COMM-RAND-MIX-0%/p1.0": CommRandPolicy("comm_rand", 0.0, 1.0),
+    "COMM-RAND-MIX-12.5%/p1.0": CommRandPolicy("comm_rand", 0.125, 1.0),
+    "COMM-RAND-MIX-25%/p1.0": CommRandPolicy("comm_rand", 0.25, 1.0),
+    "COMM-RAND-MIX-50%/p1.0": CommRandPolicy("comm_rand", 0.5, 1.0),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(name: str):
+    return prepare(synthetic.load(name), oracle=True)
+
+
+def gnn_cfg(g, layers=2, hidden=64, fanout=(10, 10)) -> GNNConfig:
+    return GNNConfig(f"sage-{g.name}", "sage", layers, hidden, g.feat_dim,
+                     g.num_classes, fanout=fanout)
+
+
+def quick_tcfg(max_epochs=15, batch=512) -> TrainConfig:
+    return TrainConfig(batch_size=batch, max_epochs=max_epochs,
+                       early_stop_patience=5)
+
+
+def timer_us(fn, *args, warmup=1, iters=3) -> float:
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,39 @@
+"""Paper Figure 5: the COMM-RAND knob sweep — val acc, per-epoch speedup,
+epochs-to-converge ratio, total-training speedup vs the uniform baseline."""
+from __future__ import annotations
+
+from benchmarks.common import POLICIES, dataset, emit, gnn_cfg, quick_tcfg
+from repro.configs.base import CommRandPolicy
+from repro.train.gnn_loop import train_once
+
+
+def main(full: bool = False):
+    names = ["reddit-like", "igb-small".replace("igb-small", "igb-like")] \
+        if full else ["tiny"]
+    p_values = (0.5, 0.9, 1.0) if full else (0.5, 1.0)
+    for ds in names:
+        g = dataset(ds)
+        cfg = gnn_cfg(g)
+        tcfg = quick_tcfg(30 if full else 12)
+        base = train_once(g, cfg, POLICIES["RAND-ROOTS/p0.5"], tcfg, seed=0)
+        emit(f"fig5/{ds}/RAND-ROOTS/p0.5", base.per_epoch_time_s * 1e6,
+             f"acc={base.val_acc:.4f};epochs={base.epochs_to_converge};"
+             f"total_s={base.total_time_s:.2f};speedup=1.00")
+        for pol_name in ("NORAND-ROOTS", "COMM-RAND-MIX-0%",
+                         "COMM-RAND-MIX-12.5%", "COMM-RAND-MIX-50%"):
+            for p in p_values:
+                key = f"{pol_name}/p1.0"
+                pol0 = POLICIES[key]
+                pol = CommRandPolicy(pol0.root_mode, pol0.mix, p)
+                r = train_once(g, cfg, pol, tcfg, seed=0)
+                emit(f"fig5/{ds}/{pol_name}/p{p}",
+                     r.per_epoch_time_s * 1e6,
+                     f"acc={r.val_acc:.4f};epochs={r.epochs_to_converge};"
+                     f"total_s={r.total_time_s:.2f};"
+                     f"speedup={base.total_time_s / r.total_time_s:.2f};"
+                     f"per_epoch_speedup="
+                     f"{base.per_epoch_time_s / r.per_epoch_time_s:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Figure 8: ClusterGCN per-epoch time is invariant to the training-
+set size; mini-batch policies scale down with it."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import POLICIES, dataset, emit, gnn_cfg
+from repro.configs.base import TrainConfig
+from repro.train.baselines import train_clustergcn
+from repro.train.gnn_loop import GNNTrainer
+
+
+def main(full: bool = False):
+    g0 = dataset("reddit-like" if full else "tiny")
+    cfg = gnn_cfg(g0)
+    tcfg = TrainConfig(batch_size=512, max_epochs=3)
+    fractions = (1.0, 0.5, 0.25, 0.1)
+    for frac in fractions:
+        n = max(int(len(g0.train_ids) * frac), 64)
+        g = dataclasses.replace(g0, train_ids=g0.train_ids[:n])
+        tr = GNNTrainer(g, cfg, tcfg, POLICIES["COMM-RAND-MIX-12.5%/p1.0"],
+                        seed=0).warmup()
+        times = [tr.run_epoch(tcfg.learning_rate)["time"] for _ in range(2)]
+        cg = train_clustergcn(g, cfg, tcfg, parts_per_batch=2, epochs=2)
+        emit(f"fig8/{g0.name}/frac{frac}", np.mean(times) * 1e6,
+             f"commrand_epoch_s={np.mean(times):.3f};"
+             f"clustergcn_epoch_s={cg['per_epoch_time_s']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Paper Figure 9 (software cache): LRU miss rates per policy. Paper's
+A100 numbers for reference: baseline 35.46%, COMM-RAND-MIX-{50,25,12.5,0}%
+= {20.99, 11.39, 6.22, 6.21}%."""
+from __future__ import annotations
+
+from benchmarks.common import POLICIES, dataset, emit
+from repro.core.cachesim import lru_miss_rate, policy_access_stream
+
+
+def main(full: bool = False):
+    g = dataset("reddit-like" if full else "tiny")
+    capacity = int(g.num_nodes * (0.2 if full else 0.6))
+    for name, pol in POLICIES.items():
+        stream = policy_access_stream(g, pol, 512, (10, 10), n_batches=8)
+        miss = lru_miss_rate(stream, capacity)
+        emit(f"fig9/{g.name}/{name}", 0.0, f"miss_rate={miss:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks. On this CPU container Pallas executes in
+interpret mode, so the us_per_call column is SHAPE-VALIDATION only; the
+`derived` column carries the analytic FLOPs/bytes used by the roofline."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timer_us
+from repro.kernels.gather_mean.ref import gather_mean_ref
+from repro.models.lm.attention import flash_attention
+from repro.models.lm.rwkv6 import wkv6_chunked
+
+
+def main(full: bool = False):
+    key = jax.random.key(0)
+
+    # gather_mean (jnp ref path — the Pallas twin is interpret-only here)
+    x = jax.random.normal(key, (4096, 128))
+    idx = jax.random.randint(jax.random.key(1), (1024, 10), 0, 4096)
+    mask = jnp.ones((1024, 10), bool)
+    f = jax.jit(gather_mean_ref)
+    us = timer_us(f, x, idx, mask)
+    emit("kernel/gather_mean/1024x10x128", us,
+         f"bytes={1024 * 10 * 128 * 4}")
+
+    # flash attention fwd+bwd
+    q = jax.random.normal(jax.random.key(2), (1, 1024, 4, 64), jnp.bfloat16)
+    k = jax.random.normal(jax.random.key(3), (1, 1024, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(jax.random.key(4), (1, 1024, 2, 64), jnp.bfloat16)
+    g = jax.jit(jax.grad(lambda q, k, v: flash_attention(
+        q, k, v).astype(jnp.float32).sum(), argnums=(0,)))
+    us = timer_us(g, q, k, v)
+    flops = 4 * 1024 * 1024 * 4 * 64 * 2   # fwd+bwd qk+pv per head
+    emit("kernel/flash_attention/1k_seq", us, f"flops={flops}")
+
+    # rwkv6 chunked
+    B, T, H, N = 1, 1024, 8, 64
+    r = jax.random.normal(jax.random.key(5), (B, T, H, N))
+    kk = jax.random.normal(jax.random.key(6), (B, T, H, N))
+    vv = jax.random.normal(jax.random.key(7), (B, T, H, N))
+    lw = jnp.clip(-jnp.exp(jax.random.normal(jax.random.key(8),
+                                             (B, T, H, N))), -5, -1e-4)
+    u = jax.random.normal(jax.random.key(9), (H, N)) * 0.1
+    s0 = jnp.zeros((B, H, N, N))
+    f = jax.jit(lambda *a: wkv6_chunked(*a)[0])
+    us = timer_us(f, r, kk, vv, lw, u, s0)
+    emit("kernel/rwkv6_chunked/1k_seq", us,
+         f"flops~={T * H * (16 * 16 * N * 2 + 2 * N * N * 2)}")
+
+    # moe grouped matmul (ref einsum)
+    from repro.kernels.moe_gmm.ref import moe_gmm_ref
+    xg = jax.random.normal(jax.random.key(10), (8, 256, 256), jnp.bfloat16)
+    w = jax.random.normal(jax.random.key(11), (8, 256, 512), jnp.bfloat16)
+    f = jax.jit(moe_gmm_ref)
+    us = timer_us(f, xg, w)
+    emit("kernel/moe_gmm/8x256x256x512", us,
+         f"flops={2 * 8 * 256 * 256 * 512}")
+
+
+if __name__ == "__main__":
+    main()

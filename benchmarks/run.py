@@ -1,0 +1,54 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §8).
+
+Prints ``name,us_per_call,derived`` CSV. Default scale is CPU-quick (tiny
+synthetic graphs, few epochs); pass --full for the EXPERIMENTS.md-scale
+sweeps. The dry-run / roofline artifacts are produced separately by
+``python -m repro.launch.dryrun`` (they need 512 fake devices).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="EXPERIMENTS.md-scale sweeps (slow)")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args()
+
+    from benchmarks import (fig5_knob_sweep, fig6_footprint,
+                            fig7_label_diversity, fig8_trainset_size,
+                            fig9_cachesim, fig10_cache_capacity,
+                            kernels_bench, table3_fixed_budget,
+                            table4_prior_work, table5_models)
+    mods = [
+        ("fig5", fig5_knob_sweep), ("fig6", fig6_footprint),
+        ("fig7", fig7_label_diversity), ("table3", table3_fixed_budget),
+        ("table4", table4_prior_work), ("fig8", fig8_trainset_size),
+        ("fig9", fig9_cachesim), ("fig10", fig10_cache_capacity),
+        ("table5", table5_models), ("kernels", kernels_bench),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in mods:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod.main(full=args.full)
+            print(f"# {name} done in {time.time() - t0:.1f}s",
+                  file=sys.stderr)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0,FAILED")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Table 4: baseline vs COMM-RAND vs ClusterGCN (+ LABOR-lite
+footprint) after a fixed number of epochs."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import POLICIES, dataset, emit, gnn_cfg
+from repro.configs.base import TrainConfig
+from repro.core import partition
+from repro.train.baselines import (labor_lite_epoch_footprint,
+                                   train_clustergcn)
+from repro.train.gnn_loop import GNNTrainer
+
+
+def main(full: bool = False):
+    datasets = ("reddit-like", "products-like") if full else ("tiny",)
+    epochs = 25 if full else 8
+    for ds in datasets:
+        g = dataset(ds)
+        cfg = gnn_cfg(g)
+        tcfg = TrainConfig(batch_size=512, max_epochs=epochs)
+        results = {}
+        for name in ("RAND-ROOTS/p0.5", "COMM-RAND-MIX-12.5%/p1.0"):
+            tr = GNNTrainer(g, cfg, tcfg, POLICIES[name], seed=0).warmup()
+            times = [tr.run_epoch(tcfg.learning_rate)["time"]
+                     for _ in range(epochs)]
+            acc = tr.evaluate(g.val_ids)["acc"]
+            results[name] = (float(np.mean(times)), acc)
+            base_t = results["RAND-ROOTS/p0.5"][0]
+            emit(f"table4/{ds}/{name}", np.mean(times) * 1e6,
+                 f"val_acc={acc:.4f};per_epoch_speedup="
+                 f"{base_t / np.mean(times):.2f}")
+        cg = train_clustergcn(g, cfg, tcfg, parts_per_batch=2, epochs=epochs)
+        emit(f"table4/{ds}/ClusterGCN", cg["per_epoch_time_s"] * 1e6,
+             f"val_acc={cg['val_acc']:.4f};per_epoch_speedup="
+             f"{results['RAND-ROOTS/p0.5'][0] / cg['per_epoch_time_s']:.2f}")
+        # LABOR-lite: structure-agnostic variance reduction (footprint only)
+        rng = np.random.default_rng(0)
+        batches = partition.batches_for_epoch(
+            g.train_ids, g.communities, POLICIES["RAND-ROOTS/p0.5"], 512,
+            rng)[:4]
+        lf = labor_lite_epoch_footprint(g, batches, cfg.fanout[:2])
+        emit(f"table4/{ds}/LABOR-lite", 0.0,
+             f"unique_nodes={lf:.0f}")
+
+
+if __name__ == "__main__":
+    main()

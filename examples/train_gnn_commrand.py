@@ -1,0 +1,49 @@
+"""End-to-end driver: train GraphSAGE with COMM-RAND for a few hundred
+steps on a reddit-like synthetic graph, with checkpointing + early stopping
+— the paper's training pipeline as a user would run it.
+
+    PYTHONPATH=src python examples/train_gnn_commrand.py \
+        --dataset reddit-like --policy comm_rand --mix 0.125 --p 1.0
+"""
+import argparse
+
+from repro.configs.base import CommRandPolicy, GNNConfig, TrainConfig
+from repro.core.reorder import prepare
+from repro.graphs import synthetic
+from repro.train.gnn_loop import GNNTrainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="reddit-like",
+                    choices=sorted(synthetic.DATASETS))
+    ap.add_argument("--policy", default="comm_rand",
+                    choices=["rand", "norand", "comm_rand"])
+    ap.add_argument("--mix", type=float, default=0.125)
+    ap.add_argument("--p", type=float, default=1.0)
+    ap.add_argument("--epochs", type=int, default=30)
+    ap.add_argument("--batch-size", type=int, default=1024)
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=3)
+    ap.add_argument("--oracle-communities", action="store_true")
+    args = ap.parse_args()
+
+    g = prepare(synthetic.load(args.dataset),
+                oracle=args.oracle_communities)
+    pol = CommRandPolicy(args.policy, args.mix, args.p)
+    cfg = GNNConfig(f"sage-{args.dataset}", "sage", args.layers, args.hidden,
+                    g.feat_dim, g.num_classes,
+                    fanout=(10,) * args.layers)
+    tcfg = TrainConfig(batch_size=args.batch_size, max_epochs=args.epochs)
+    print(f"policy: {pol.describe()}  graph: {g.name} ({g.num_nodes} nodes)")
+    tr = GNNTrainer(g, cfg, tcfg, pol, seed=0).warmup()
+    print(f"calibrated caps: {tr.caps}")
+    res = tr.fit(verbose=True)
+    print(f"\nbest val_acc={res.val_acc:.4f} test_acc={res.test_acc:.4f} "
+          f"epochs={res.epochs_to_converge} "
+          f"per_epoch={res.per_epoch_time_s:.2f}s "
+          f"total={res.total_time_s:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""GAT (paper §6.4 generalization study)."""
+from repro.configs.base import GNNConfig
+
+CONFIG = GNNConfig(
+    name="gat",
+    model="gat",
+    num_layers=3,
+    hidden_dim=256,
+    in_dim=602,
+    num_classes=41,
+    fanout=(10, 10, 10),
+    gat_heads=4,
+)

@@ -1,0 +1,12 @@
+"""GCN (paper §6.4 generalization study)."""
+from repro.configs.base import GNNConfig
+
+CONFIG = GNNConfig(
+    name="gcn",
+    model="gcn",
+    num_layers=3,
+    hidden_dim=256,
+    in_dim=602,
+    num_classes=41,
+    fanout=(10, 10, 10),
+)

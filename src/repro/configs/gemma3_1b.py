@@ -1,0 +1,21 @@
+"""gemma3-1b [dense] — 5:1 local:global attention. [hf:google/gemma-3-1b-pt]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    num_layers=26,
+    d_model=1152,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    attention="mixed",
+    window=512,
+    global_every=6,
+    qk_norm=True,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    act="gelu",
+)

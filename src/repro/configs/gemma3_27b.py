@@ -1,0 +1,24 @@
+"""gemma3-27b [dense] — 5:1 local:global attention, 128k context.
+
+Source: hf:google/gemma-3-27b-it (family config style per gemma-3-1b-pt card).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    attention="mixed",        # 5 local : 1 global
+    window=1024,
+    global_every=6,
+    qk_norm=True,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    act="gelu",
+)

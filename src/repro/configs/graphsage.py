@@ -1,0 +1,16 @@
+"""GraphSAGE (the paper's primary model) — 3 layers, hidden 256, fanout 10.
+
+Paper §5: DGL reference defaults (batch=1024, fanout=10, lr=1e-3,
+weight_decay=5e-4, hidden=256).
+"""
+from repro.configs.base import GNNConfig
+
+CONFIG = GNNConfig(
+    name="graphsage",
+    model="sage",
+    num_layers=3,
+    hidden_dim=256,
+    in_dim=602,                   # reddit-like
+    num_classes=41,
+    fanout=(10, 10, 10),
+)

@@ -1,0 +1,22 @@
+"""hymba-1.5b [hybrid] — parallel attention + mamba heads, ssm_state=16.
+[arXiv:2411.13676]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,             # padded to 32256 for TP
+    attention="mixed",            # SWA with periodic global layers
+    window=1024,
+    global_every=16,
+    ssm_state=16,
+    hybrid=True,
+    act="silu",
+)

@@ -1,0 +1,18 @@
+"""qwen1.5-32b [dense] — MHA (kv=40), QKV bias. [hf:Qwen/Qwen1.5-32B]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    head_dim=128,
+    d_ff=27392,
+    vocab_size=152064,
+    attention="full",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    act="silu",
+)

@@ -1,0 +1,25 @@
+"""qwen2-moe-a2.7b [moe] — 60 routed experts top-4 + shared expert.
+[hf:Qwen/Qwen1.5-MoE-A2.7B]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,                    # = moe expert ff (per assignment)
+    vocab_size=151936,
+    attention="full",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    moe=True,
+    num_experts=60,
+    top_k=4,
+    moe_d_ff=1408,
+    shared_d_ff=5632,             # "4 shared" = one shared expert of 4x width
+    act="silu",
+)

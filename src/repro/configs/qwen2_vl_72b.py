@@ -1,0 +1,24 @@
+"""qwen2-vl-72b [vlm] — qwen2-72b backbone + M-RoPE; vision frontend is a
+stub (`input_specs` supplies precomputed patch embeddings merged into the
+leading `vision_tokens` positions). [arXiv:2409.12191]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    attention="full",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    mrope=True,
+    mrope_sections=(16, 24, 24),   # t/h/w split of head_dim/2 = 64
+    vision_tokens=1024,
+    act="silu",
+)

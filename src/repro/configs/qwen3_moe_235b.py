@@ -1,0 +1,24 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts top-8, GQA kv=4, qk-norm.
+[hf:Qwen/Qwen3-235B-A22B family]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=151936,
+    attention="full",
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    moe=True,
+    num_experts=128,
+    top_k=8,
+    moe_d_ff=1536,
+    act="silu",
+)

@@ -1,0 +1,19 @@
+"""rwkv6-7b "Finch" [ssm] — attention-free, data-dependent decay.
+[arXiv:2404.05892]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,                 # wkv heads, head_dim 64
+    num_kv_heads=64,
+    head_dim=64,
+    d_ff=14336,
+    vocab_size=65536,
+    attention="none",
+    rwkv=True,
+    act="relu2",                  # rwkv channel-mix uses relu^2
+)

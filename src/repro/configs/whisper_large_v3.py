@@ -1,0 +1,25 @@
+"""whisper-large-v3 [audio] — encoder-decoder; conv frontend is a stub
+(`input_specs` supplies precomputed (B, 1500, d_model) frame embeddings).
+[arXiv:2212.04356]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,                # decoder layers
+    num_encoder_layers=32,
+    encoder_decoder=True,
+    encoder_seq=1500,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,             # padded to 51968 for TP
+    attention="full",
+    act="gelu",
+    norm="layernorm",
+    mlp_bias=True,
+    learned_pos=True,
+)

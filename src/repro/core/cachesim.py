@@ -1,0 +1,49 @@
+"""LRU software-cache simulator (paper §6.5.1/§6.5.2 analogue).
+
+The paper measures a DGL GPU-resident feature cache (UVA path) and MIG-cut
+L2 capacities; neither exists on TPU, so we *model* the cache: replay the
+exact per-batch feature-access streams produced by each policy through an
+LRU of a given capacity and report miss rates. The paper's numbers to match
+qualitatively: baseline 35.46% vs COMM-RAND-MIX-{50..0}% = 20.99/11.39/
+6.22/6.21% (Fig 9), and growing speedups as capacity shrinks (Fig 10).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Iterable, List
+
+import numpy as np
+
+
+def lru_miss_rate(batches: Iterable[np.ndarray], capacity: int) -> float:
+    """batches: per-batch arrays of accessed node ids (already deduped)."""
+    cache: OrderedDict = OrderedDict()
+    hits = 0
+    total = 0
+    for ids in batches:
+        for u in np.asarray(ids):
+            u = int(u)
+            total += 1
+            if u in cache:
+                cache.move_to_end(u)
+                hits += 1
+            else:
+                cache[u] = True
+                if len(cache) > capacity:
+                    cache.popitem(last=False)
+    return 1.0 - hits / max(total, 1)
+
+
+def policy_access_stream(graph, policy, batch_size, fanouts, n_batches=16,
+                         seed=0) -> List[np.ndarray]:
+    """Unique input-node ids per batch under `policy` (numpy builder)."""
+    from repro.core import partition
+    from repro.core.minibatch import build_batch_np
+    rng = np.random.default_rng(seed)
+    batches = partition.batches_for_epoch(
+        graph.train_ids, graph.communities, policy, batch_size, rng)
+    out = []
+    for b in batches[:n_batches]:
+        _, level = build_batch_np(rng, graph, b, fanouts, policy.p)
+        out.append(level)
+    return out

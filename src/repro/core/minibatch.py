@@ -1,0 +1,182 @@
+"""Static-shape mini-batch construction (the TPU-native core of COMM-RAND).
+
+A batch is a tower of node levels F_0 (roots) ⊂ F_1 ⊂ ... ⊂ F_L (input
+level), built by biased neighbor sampling + *static-size dedup*
+(`jnp.unique(..., size=cap)`). The caps are CALIBRATED PER POLICY
+(`calibrate_caps`): community-biased policies dedup far more aggressively, so
+their compiled batches carry smaller gather buffers — the paper's working-set
+reduction, expressed at compile time (DESIGN.md §2).
+
+Blocks are stored input-side first: blocks[0] maps F_L -> F_{L-1}. Every dst
+has exactly `fanout` sampled source slots + one self slot, so aggregation is
+a masked mean over a dense (n_dst, fanout, dim) gather — no segment ops.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CommRandPolicy
+from repro.core import partition
+from repro.core.sampler import sample_neighbors
+from repro.graphs.csr import DeviceGraph, Graph
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class Block:
+    src_pos: jnp.ndarray     # (n_dst, fanout) int32 positions into src level
+    self_pos: jnp.ndarray    # (n_dst,) int32 position of dst in src level
+    edge_mask: jnp.ndarray   # (n_dst, fanout) bool
+    dst_mask: jnp.ndarray    # (n_dst,) bool
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class MiniBatch:
+    levels: List[jnp.ndarray]  # per-level sorted unique node ids, 0=roots
+    node_mask: jnp.ndarray   # (cap_L,) bool — input level validity
+    blocks: List[Block]      # input-side first
+    labels: jnp.ndarray      # (B,) int32 (aligned with levels[0])
+    label_mask: jnp.ndarray  # (B,) bool
+
+    @property
+    def node_ids(self):
+        """Input-level unique node ids (feature-gather index)."""
+        return self.levels[-1]
+
+    @property
+    def roots(self):
+        return self.levels[0]
+
+    @property
+    def num_unique(self):
+        return self.node_mask.sum()
+
+
+def _positions(level: jnp.ndarray, ids: jnp.ndarray):
+    """Map node ids -> positions in the sorted unique `level` array."""
+    pos = jnp.searchsorted(level, ids).astype(jnp.int32)
+    pos = jnp.minimum(pos, level.shape[0] - 1)
+    ok = level[pos] == ids
+    return pos, ok
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fanouts", "caps", "mode"))
+def build_batch(key, g: DeviceGraph, roots, labels_all, fanouts: Tuple[int],
+                caps: Tuple[int], p, mode: str = "sample") -> MiniBatch:
+    """roots: (B,) int32 with -1 padding. caps: per-level unique caps,
+    len == len(fanouts), cap for levels 1..L (level 0 cap is B)."""
+    N = g.num_nodes
+    B = roots.shape[0]
+    root_mask = roots >= 0
+    level = jnp.where(root_mask, roots, N).astype(jnp.int32)
+    # roots must be sorted for searchsorted-based mapping; keep label order
+    level = jnp.sort(level)
+    labels = jnp.where(root_mask, labels_all[jnp.where(
+        root_mask, roots, 0)], 0)
+
+    levels = [level]
+    blocks = []
+    keys = jax.random.split(key, len(fanouts))
+    for h, (r, cap) in enumerate(zip(fanouts, caps)):
+        prev = levels[-1]
+        srcs, smask = sample_neighbors(keys[h], g, prev, r, p, mode=mode)
+        all_ids = jnp.concatenate([prev, srcs.reshape(-1)])
+        nxt = jnp.unique(all_ids, size=cap, fill_value=N).astype(jnp.int32)
+        self_pos, self_ok = _positions(nxt, prev)
+        src_pos, src_ok = _positions(nxt, srcs.reshape(-1))
+        blocks.append(Block(
+            src_pos=src_pos.reshape(prev.shape[0], r),
+            self_pos=self_pos,
+            edge_mask=(smask & src_ok.reshape(prev.shape[0], r)
+                       & (srcs < N)),
+            dst_mask=(prev < N) & self_ok,
+        ))
+        levels.append(nxt)
+
+    top = levels[-1]
+    # labels aligned to the SORTED root level: re-gather via positions
+    root_pos, _ = _positions(levels[0], jnp.where(root_mask, roots, N))
+    lab_sorted = jnp.zeros((B,), labels_all.dtype).at[root_pos].set(
+        jnp.where(root_mask, labels, 0), mode="drop")
+    lmask = jnp.zeros((B,), bool).at[root_pos].set(root_mask, mode="drop")
+    return MiniBatch(
+        levels=levels,
+        node_mask=top < N,
+        blocks=blocks[::-1],
+        labels=lab_sorted,
+        label_mask=lmask & (levels[0] < N),
+    )
+
+
+# ---------------------------------------------------------------------------
+# numpy reference builder (exact dedup; calibration + test oracle)
+# ---------------------------------------------------------------------------
+def build_batch_np(rng: np.random.Generator, graph: Graph, roots, fanouts,
+                   p: float):
+    """Returns per-level unique-node counts + the input-level footprint."""
+    comm = graph.communities
+    level = np.unique(roots[roots >= 0])
+    sizes = [len(level)]
+    for r in fanouts:
+        srcs = []
+        for u in level:
+            s, e = graph.indptr[u], graph.indptr[u + 1]
+            nbrs = graph.indices[s:e]
+            if len(nbrs) == 0:
+                srcs.append(np.array([u] * r))
+                continue
+            intra = comm[nbrs] == comm[u]
+            ni, no = int(intra.sum()), int((~intra).sum())
+            w_i, w_o = p * ni, (1 - p) * no
+            pi = 1.0 if no == 0 else (0.0 if ni == 0 else w_i / (w_i + w_o))
+            cls = rng.random(r) < pi
+            nbr_i = nbrs[intra] if ni else nbrs
+            nbr_o = nbrs[~intra] if no else nbrs
+            pick = np.where(cls, nbr_i[rng.integers(0, max(ni, 1), r)],
+                            nbr_o[rng.integers(0, max(no, 1), r)])
+            srcs.append(pick)
+        level = np.unique(np.concatenate([level] + srcs))
+        sizes.append(len(level))
+    return sizes, level
+
+
+def calibrate_caps(graph: Graph, policy: CommRandPolicy, batch_size: int,
+                   fanouts, n_probe: int = 6, margin: float = 1.15,
+                   seed: int = 0, align: int = 128) -> Tuple[int, ...]:
+    """Policy-derived static caps: max unique nodes per level over probe
+    batches x margin, rounded up to `align` (TPU-friendly shapes)."""
+    rng = np.random.default_rng(seed)
+    maxes = np.zeros(len(fanouts), np.int64)
+    probes = 0
+    while probes < n_probe:
+        batches = partition.batches_for_epoch(
+            graph.train_ids, graph.communities, policy, batch_size, rng)
+        for b in batches[:max(1, n_probe - probes)]:
+            sizes, _ = build_batch_np(rng, graph, b, fanouts, policy.p)
+            maxes = np.maximum(maxes, sizes[1:])
+            probes += 1
+            if probes >= n_probe:
+                break
+    caps = []
+    lo = batch_size
+    for m in maxes:
+        c = int(np.ceil(m * margin / align) * align)
+        c = max(c, lo + align)       # level must fit its predecessor
+        caps.append(c)
+        lo = c
+    return tuple(caps)
+
+
+def feature_bytes(batch_or_cap, feat_dim: int, itemsize: int = 4) -> int:
+    """Paper Fig 6 metric: input feature bytes gathered per batch."""
+    if isinstance(batch_or_cap, (int, np.integer)):
+        return int(batch_or_cap) * feat_dim * itemsize
+    return int(batch_or_cap.num_unique) * feat_dim * itemsize

@@ -1,0 +1,96 @@
+"""Biased root-node partitioning (paper §4.1, Figure 3, Table 1).
+
+Policies over the training set, per epoch:
+  RAND-ROOTS        uniform random shuffle (baseline *)
+  NORAND-ROOTS      no shuffle — static community order
+  COMM-RAND-MIX-k%  communities shuffled as blocks; consecutive groups of
+                    max(1, round(k * n_comm)) shuffled communities merge into
+                    super-blocks; contents shuffled WITHIN each super-block.
+
+k=0 is the paper's COMM-RAND-MIX-0% (block shuffle + intra-community
+shuffle). Larger k mixes more communities -> more randomness, less bias.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.configs.base import CommRandPolicy
+
+
+def group_train_by_community(train_ids: np.ndarray,
+                             communities: np.ndarray) -> List[np.ndarray]:
+    """Training-set node ids grouped per community (ascending comm id)."""
+    comm = communities[train_ids]
+    order = np.argsort(comm, kind="stable")
+    sorted_ids = train_ids[order]
+    sorted_comm = comm[order]
+    cuts = np.flatnonzero(np.diff(sorted_comm)) + 1
+    return np.split(sorted_ids, cuts)
+
+
+def epoch_order(train_ids: np.ndarray, communities: np.ndarray,
+                policy: CommRandPolicy, rng: np.random.Generator
+                ) -> np.ndarray:
+    """The (possibly constrained-random) permutation of the training set for
+    one epoch."""
+    if policy.root_mode == "rand":
+        return rng.permutation(train_ids)
+    groups = group_train_by_community(train_ids, communities)
+    if policy.root_mode == "norand":
+        return np.concatenate(groups)
+    if policy.root_mode != "comm_rand":
+        raise ValueError(policy.root_mode)
+    n_comm = len(groups)
+    # (1) shuffle communities as whole blocks
+    block_order = rng.permutation(n_comm)
+    # (2) merge consecutive shuffled blocks into super-blocks of m
+    m = max(1, int(round(policy.mix * n_comm)))
+    out = []
+    for i in range(0, n_comm, m):
+        sb = np.concatenate([groups[j] for j in block_order[i:i + m]])
+        rng.shuffle(sb)              # (3) shuffle within the super-block
+        out.append(sb)
+    return np.concatenate(out)
+
+
+def make_batches(order: np.ndarray, batch_size: int,
+                 drop_last: bool = False) -> np.ndarray:
+    """Split an epoch order into (n_batches, batch_size); last batch padded
+    with -1 unless drop_last."""
+    n = len(order)
+    if drop_last:
+        n_batches = n // batch_size
+        return order[:n_batches * batch_size].reshape(n_batches, batch_size)
+    n_batches = (n + batch_size - 1) // batch_size
+    out = np.full((n_batches, batch_size), -1, order.dtype)
+    out.flat[:n] = order
+    return out
+
+
+def batches_for_epoch(train_ids, communities, policy, batch_size, rng,
+                      drop_last: bool = False) -> np.ndarray:
+    return make_batches(
+        epoch_order(train_ids, communities, policy, rng), batch_size,
+        drop_last)
+
+
+# ---------------------------------------------------------------------------
+# diagnostics used by the paper's figures
+# ---------------------------------------------------------------------------
+def labels_per_batch(batches: np.ndarray, labels: np.ndarray) -> float:
+    """Fig 7 metric: mean #distinct labels among batch root nodes."""
+    counts = []
+    for b in batches:
+        ids = b[b >= 0]
+        counts.append(len(np.unique(labels[ids])))
+    return float(np.mean(counts))
+
+
+def communities_per_batch(batches: np.ndarray, communities) -> float:
+    counts = []
+    for b in batches:
+        ids = b[b >= 0]
+        counts.append(len(np.unique(communities[ids])))
+    return float(np.mean(counts))

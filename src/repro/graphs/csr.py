@@ -1,0 +1,138 @@
+"""CSR graph substrate (host-side numpy + device-side jnp mirrors).
+
+The device mirror stores the *intra-first* row layout: each adjacency row is
+re-ordered so intra-community edges come first and `n_intra[u]` records the
+split point — this turns the paper's biased neighbor sampling (probability p
+for intra-community edges) into a two-phase draw with O(1) per-sample work
+and no per-edge weight array.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class Graph:
+    indptr: np.ndarray           # (N+1,) int64
+    indices: np.ndarray          # (E,) int32
+    features: np.ndarray         # (N, F) float32
+    labels: np.ndarray           # (N,) int32
+    train_ids: np.ndarray
+    val_ids: np.ndarray
+    test_ids: np.ndarray
+    communities: Optional[np.ndarray] = None   # (N,) int32
+    n_intra: Optional[np.ndarray] = None       # (N,) int32 (intra-first rows)
+    name: str = "graph"
+
+    @property
+    def num_nodes(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.indices)
+
+    @property
+    def feat_dim(self) -> int:
+        return self.features.shape[1]
+
+    @property
+    def num_classes(self) -> int:
+        return int(self.labels.max()) + 1
+
+    def degrees(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+
+def symmetrize(indptr, indices):
+    """Make the graph undirected (union with reverse edges), dedup."""
+    N = len(indptr) - 1
+    src = np.repeat(np.arange(N, dtype=np.int64), np.diff(indptr))
+    dst = indices.astype(np.int64)
+    u = np.concatenate([src, dst])
+    v = np.concatenate([dst, src])
+    key = u * N + v
+    key = np.unique(key)
+    u, v = key // N, (key % N).astype(np.int32)
+    new_indptr = np.zeros(N + 1, np.int64)
+    np.add.at(new_indptr, u + 1, 1)
+    np.cumsum(new_indptr, out=new_indptr)
+    return new_indptr, v
+
+
+def reorder(graph: Graph, perm: np.ndarray) -> Graph:
+    """Relabel nodes: new_id = perm_inv[old_id]; node `perm[i]` becomes `i`."""
+    N = graph.num_nodes
+    perm_inv = np.empty(N, np.int64)
+    perm_inv[perm] = np.arange(N)
+    deg = graph.degrees()[perm]
+    new_indptr = np.zeros(N + 1, np.int64)
+    np.cumsum(deg, out=new_indptr[1:])
+    new_indices = np.empty_like(graph.indices)
+    for i in range(N):                      # vectorized below for big graphs
+        s, e = graph.indptr[perm[i]], graph.indptr[perm[i] + 1]
+        new_indices[new_indptr[i]:new_indptr[i + 1]] = \
+            perm_inv[graph.indices[s:e]]
+    out = replace(
+        graph,
+        indptr=new_indptr,
+        indices=new_indices.astype(np.int32),
+        features=graph.features[perm],
+        labels=graph.labels[perm],
+        train_ids=np.sort(perm_inv[graph.train_ids]).astype(np.int64),
+        val_ids=np.sort(perm_inv[graph.val_ids]).astype(np.int64),
+        test_ids=np.sort(perm_inv[graph.test_ids]).astype(np.int64),
+        communities=graph.communities[perm]
+        if graph.communities is not None else None,
+        n_intra=None,       # row layout must be rebuilt after relabeling
+    )
+    return out
+
+
+def intra_first_layout(graph: Graph) -> Graph:
+    """Reorder each adjacency row: intra-community neighbors first."""
+    assert graph.communities is not None
+    comm = graph.communities
+    src = np.repeat(np.arange(graph.num_nodes), graph.degrees())
+    intra = comm[src] == comm[graph.indices]
+    # stable sort within rows: key = (row, ~intra)
+    order = np.lexsort((~intra, src))
+    new_indices = graph.indices[order]
+    n_intra = np.zeros(graph.num_nodes, np.int32)
+    np.add.at(n_intra, src[intra], 1)
+    return replace(graph, indices=new_indices, n_intra=n_intra)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["indptr", "indices", "n_intra", "communities", "degrees"],
+    meta_fields=["num_nodes"])
+@dataclass
+class DeviceGraph:
+    """jnp mirrors used by the jit-compiled samplers/batch builder."""
+    indptr: jnp.ndarray
+    indices: jnp.ndarray
+    n_intra: jnp.ndarray
+    communities: jnp.ndarray
+    degrees: jnp.ndarray
+    num_nodes: int
+
+    @staticmethod
+    def from_graph(g: Graph) -> "DeviceGraph":
+        assert g.n_intra is not None, "run intra_first_layout first"
+        # int32 offsets: fine below ~2^31 edges; the pod-scale pipeline keeps
+        # topology on hosts (DESIGN.md §4) so this bound is per-host.
+        return DeviceGraph(
+            indptr=jnp.asarray(g.indptr, jnp.int32),
+            indices=jnp.asarray(g.indices, jnp.int32),
+            n_intra=jnp.asarray(g.n_intra, jnp.int32),
+            communities=jnp.asarray(g.communities, jnp.int32),
+            degrees=jnp.asarray(g.degrees(), jnp.int32),
+            num_nodes=g.num_nodes,
+        )

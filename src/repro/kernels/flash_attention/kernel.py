@@ -1,0 +1,98 @@
+"""Pallas TPU flash attention (forward) with causal + sliding-window masks.
+
+Grid (B, H, Sq/bq, Skv/bk); the KV axis is innermost and sequential, carrying
+the online-softmax state (m, l, acc) in VMEM scratch. GQA is handled in the
+K/V index_maps (head h reads kv-head h // group). MXU-aligned 128-tiles.
+
+The training path uses the custom-VJP jnp twin
+(`repro.models.lm.attention.flash_attention`) — identical math, validated
+against each other and `attention_ref` in tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
+            scale, bq, bk, causal, window, is_global, q_offset):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)            # (bq, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bk, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+
+    q_pos = q_offset + qi * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    kv_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok = ok & (kv_pos <= q_pos)
+    if not is_global:
+        ok = ok & ((q_pos - kv_pos) < window)
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_s[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_s[...] = l_s[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_s[...] = acc_s[...] * alpha + jax.lax.dot(p, v)
+    m_s[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0, :, 0, :] = (
+            acc_s[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=1 << 30,
+                           is_global=True, q_offset=0, bq=128, bk=128,
+                           interpret=False):
+    """q: (B, Sq, H, D); k/v: (B, Skv, KH, D) with H % KH == 0."""
+    B, Sq, H, D = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    grid = (B, H, Sq // bq, Skv // bk)
+    kernel = functools.partial(
+        _kernel, scale=1.0 / np.sqrt(D), bq=bq, bk=bk, causal=causal,
+        window=window, is_global=is_global, q_offset=q_offset)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, qi, ki, g=G: (b, ki, h // g, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, qi, ki, g=G: (b, ki, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

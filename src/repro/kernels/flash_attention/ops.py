@@ -1,0 +1,18 @@
+"""jit'd wrapper: Pallas kernel on TPU, interpret mode elsewhere."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "is_global",
+                                             "q_offset", "bq", "bk"))
+def flash_attention_op(q, k, v, *, causal=True, window=1 << 30,
+                       is_global=True, q_offset=0, bq=128, bk=128):
+    interpret = jax.default_backend() != "tpu"
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, is_global=is_global,
+        q_offset=q_offset, bq=bq, bk=bk, interpret=interpret)

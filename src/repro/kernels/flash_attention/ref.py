@@ -1,0 +1,2 @@
+"""Oracle: re-export the naive O(S^2) attention."""
+from repro.models.lm.attention import attention_ref  # noqa: F401

@@ -1,0 +1,18 @@
+"""jit'd public wrapper: Pallas on TPU, interpret-mode kernel on CPU."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.gather_mean.kernel import gather_mean_pallas
+from repro.kernels.gather_mean.ref import gather_mean_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def gather_mean(x, idx, mask, use_kernel: bool = True):
+    if not use_kernel:
+        return gather_mean_ref(x, idx, mask)
+    interpret = jax.default_backend() != "tpu"
+    return gather_mean_pallas(x, idx.astype("int32"), mask.astype("int32"),
+                              interpret=interpret)

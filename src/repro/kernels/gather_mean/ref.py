@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the gather_mean kernel."""
+import jax.numpy as jnp
+
+
+def gather_mean_ref(x, idx, mask):
+    g = x[jnp.clip(idx, 0, x.shape[0] - 1)].astype(jnp.float32)
+    m = mask.astype(jnp.float32)[..., None]
+    s = (g * m).sum(axis=1)
+    cnt = jnp.maximum(m.sum(axis=1), 1.0)
+    return s / cnt

@@ -1,0 +1,44 @@
+"""Pallas TPU kernel: grouped expert matmul (E, C, d) x (E, d, f).
+
+The MoE dispatch packs each expert's tokens into fixed-capacity rows; this
+kernel runs the per-expert matmul with d-axis accumulation in the revisited
+output block. Grid (E, C/bc, f/bf, d/bd), d innermost sequential.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    di = pl.program_id(3)
+    nd = pl.num_programs(3)
+
+    @pl.when(di == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0].astype(jnp.float32)                 # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)                 # (bd, bf)
+    o_ref[...] += jax.lax.dot(x, w)[None].astype(o_ref.dtype)
+
+
+def moe_gmm_pallas(x, w, *, bc=128, bf=128, bd=128, interpret=False):
+    """x: (E, C, d); w: (E, d, f) -> (E, C, f) float32."""
+    E, C, d = x.shape
+    f = w.shape[2]
+    bc, bf, bd = min(bc, C), min(bf, f), min(bd, d)
+    assert C % bc == 0 and f % bf == 0 and d % bd == 0
+    grid = (E, C // bc, f // bf, d // bd)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((1, bd, bf), lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, ci, fi, di: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, C, f), jnp.float32),
+        interpret=interpret,
+    )(x, w)

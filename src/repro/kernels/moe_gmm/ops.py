@@ -1,0 +1,14 @@
+"""jit'd wrapper for the grouped expert matmul kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_gmm.kernel import moe_gmm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("bc", "bf", "bd"))
+def moe_gmm(x, w, bc: int = 128, bf: int = 128, bd: int = 128):
+    interpret = jax.default_backend() != "tpu"
+    return moe_gmm_pallas(x, w, bc=bc, bf=bf, bd=bd, interpret=interpret)

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: chunked WKV6 recurrence (RWKV6 token mixing).
+
+Grid (B, H, T/C) with the chunk axis innermost and sequential, carrying the
+(N, N) per-head state in VMEM scratch across chunk steps. Within a chunk the
+recurrence is evaluated in dense matmul form (MXU-friendly) — the same math
+as `repro.models.lm.rwkv6.wkv6_chunked` (see there for the stability
+argument: |logw| * C < 88 keeps exp() inside fp32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 16
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, chunk):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)            # (C, N)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    lw = w_ref[0, :, 0, :].astype(jnp.float32)           # log-decay < 0
+    u = u_ref[0, :].astype(jnp.float32)                  # (N,)
+
+    cum = jnp.cumsum(lw, axis=0)
+    cum_prev = cum - lw
+    q_dec = r * jnp.exp(cum_prev)
+    k_dec = k * jnp.exp(-cum)
+    scores = jax.lax.dot_general(q_dec, k_dec, (((1,), (1,)), ((), ())))
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    scores = jnp.where(ii > jj, scores, 0.0)
+    diag = jnp.sum(r * u[None, :] * k, axis=1)           # (C,)
+    scores = scores + jnp.where(ii == jj, diag[:, None], 0.0)
+
+    out = jax.lax.dot(scores, v)                         # (C, N)
+    out = out + jax.lax.dot(q_dec, s_ref[...])
+    o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+    last = cum[chunk - 1]                                # (N,)
+    k_rem = k * jnp.exp(last[None, :] - cum)
+    s_ref[...] = jnp.exp(last)[:, None] * s_ref[...] + \
+        jax.lax.dot_general(k_rem, v, (((0,), (0,)), ((), ())))
+
+
+def wkv6_pallas(r, k, v, logw, u, *, chunk=CHUNK, interpret=False):
+    """r/k/v/logw: (B, T, H, N); u: (H, N). Returns out (B, T, H, N) f32.
+
+    State starts at zero (training segments); T % chunk == 0.
+    """
+    B, T, H, N = r.shape
+    assert T % chunk == 0
+    grid = (B, H, T // chunk)
+    spec = pl.BlockSpec((1, chunk, 1, N), lambda b, h, c: (b, c, h, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, N), lambda b, h, c: (h, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, T, H, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

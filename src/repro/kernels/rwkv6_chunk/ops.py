@@ -1,0 +1,14 @@
+"""jit'd wrapper for the WKV6 chunk kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rwkv6_chunk.kernel import CHUNK, wkv6_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6_op(r, k, v, logw, u, chunk: int = CHUNK):
+    interpret = jax.default_backend() != "tpu"
+    return wkv6_pallas(r, k, v, logw, u, chunk=chunk, interpret=interpret)

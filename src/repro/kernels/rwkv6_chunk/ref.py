@@ -1,0 +1,11 @@
+"""Oracle: exact per-timestep WKV6 scan."""
+import jax.numpy as jnp
+
+from repro.models.lm.rwkv6 import wkv6_scan
+
+
+def wkv6_ref(r, k, v, logw, u):
+    B, T, H, N = r.shape
+    s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    out, _ = wkv6_scan(r, k, v, logw, u, s0)
+    return out.astype(jnp.float32)

@@ -1,0 +1,117 @@
+"""Analytic (napkin) FLOP / HBM-byte model per (arch x shape) cell.
+
+Why this exists: XLA's ``cost_analysis()`` counts a ``while`` body ONCE, so
+scan-over-layers programs under-report FLOPs/bytes by ~L x. Collectives are
+corrected by the loop-aware HLO parse (dryrun.collective_bytes); compute and
+memory use this analytic model, cross-checked against the HLO numbers (the
+HLO value divided by the loop undercount ratio should land within ~2x).
+
+Conventions (documented in EXPERIMENTS.md §Roofline):
+  train   matmul FLOPs = 8 * N_active * D   (6ND + one remat re-forward)
+  prefill matmul FLOPs = 2 * N_active * D
+  decode  matmul FLOPs = 2 * N_active * B
+  attention, WKV, logits terms added explicitly; MODEL_FLOPS (the "useful"
+  numerator) stays the classic 6ND / 2ND.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclass
+class CellCost:
+    flops_global: float
+    hbm_bytes_per_device: float
+    model_flops: float           # 6ND / 2ND "useful" numerator
+
+
+def _layer_params(cfg: ModelConfig):
+    """(dense per-decoder-layer active, moe total extra, encoder per-layer)."""
+    d = cfg.d_model
+    attn = d * cfg.q_dim * 2 + d * cfg.kv_dim * 2
+    if cfg.rwkv:
+        dense = d * cfg.q_dim * 5 + 2 * d * cfg.d_ff + d * d
+        return dense, 0, 0
+    if cfg.moe:
+        act = attn + 3 * d * cfg.moe_d_ff * cfg.top_k + \
+            (3 * d * cfg.shared_d_ff if cfg.shared_d_ff else 0)
+        extra = 3 * d * cfg.moe_d_ff * (cfg.num_experts - cfg.top_k)
+        return act, extra, 0
+    mlp = (2 if cfg.mlp_bias else 3) * d * cfg.d_ff
+    enc = (attn + mlp) if cfg.encoder_decoder else 0
+    dec = attn + mlp + (attn if cfg.encoder_decoder else 0)  # + cross-attn
+    return dec, 0, enc
+
+
+def n_active(cfg: ModelConfig) -> int:
+    dec, _, enc = _layer_params(cfg)
+    return dec * cfg.num_layers + enc * cfg.num_encoder_layers
+
+
+def n_total(cfg: ModelConfig) -> int:
+    dec, extra, enc = _layer_params(cfg)
+    return (dec + extra) * cfg.num_layers + enc * cfg.num_encoder_layers
+
+
+def _attn_flops_fwd(cfg: ModelConfig, B: int, S: int) -> float:
+    """Causal flash forward over all layers (window-aware)."""
+    tot = 0.0
+    for i in range(cfg.num_layers):
+        s_eff = S if cfg.is_global_layer(i) else min(S, cfg.window)
+        tot += 2.0 * B * S * s_eff * cfg.num_heads * cfg.head_dim
+    if cfg.encoder_decoder:
+        E = cfg.encoder_seq
+        tot += cfg.num_encoder_layers * 4.0 * B * E * E * cfg.num_heads * \
+            cfg.head_dim
+        tot += cfg.num_layers * 4.0 * B * S * E * cfg.num_heads * cfg.head_dim
+    if cfg.rwkv:
+        C, N, H = 16, cfg.head_dim, cfg.num_heads
+        tot += B * S * H * (4.0 * C * N + 6.0 * N * N)
+    if cfg.hybrid:
+        tot += B * S * cfg.d_model * cfg.ssm_state * 6.0
+    return tot
+
+
+def cell_cost(cfg: ModelConfig, shape: ShapeConfig, chips: int) -> CellCost:
+    B, S = shape.global_batch, shape.seq_len
+    D = B * S
+    V, d = cfg.padded_vocab, cfg.d_model
+    na, nt = n_active(cfg), n_total(cfg)
+    tp = 16
+    L = cfg.num_layers + cfg.num_encoder_layers
+
+    if shape.kind == "train":
+        flops = 8.0 * na * D + 4.5 * _attn_flops_fwd(cfg, B, S) \
+            + 8.0 * D * d * V
+        model = 6.0 * na * D
+        hbm = (28.0 * nt / chips                     # adamw state traffic
+               + 3 * 2.0 * nt / tp                    # weight passes (bf16)
+               + 6.0 * L * D * d * 2 / chips          # activations
+               + 3.0 * D * V * 2 / chips)             # CE logits chunks
+    elif shape.kind == "prefill":
+        flops = 2.0 * na * D + _attn_flops_fwd(cfg, B, S) + 2.0 * B * d * V
+        model = 2.0 * na * D
+        hbm = (2.0 * nt / tp
+               + 2.0 * L * D * d * 2 / chips
+               + 2.0 * cfg.num_layers * D * cfg.kv_dim * 2 * 2 / chips)
+    else:  # decode: one token per sequence, full-context attention
+        attn = 0.0
+        for i in range(cfg.num_layers):
+            s_eff = S if cfg.is_global_layer(i) else min(S, cfg.window)
+            if cfg.rwkv:
+                s_eff = 0
+            attn += 4.0 * B * s_eff * cfg.num_heads * cfg.head_dim
+        if cfg.rwkv:
+            attn += 6.0 * B * cfg.num_heads * cfg.head_dim ** 2 * \
+                cfg.num_layers
+        flops = 2.0 * na * B + attn + 2.0 * B * d * V
+        model = 2.0 * na * B
+        cache = 0.0
+        for i in range(cfg.num_layers):
+            s_eff = 0 if cfg.rwkv else \
+                (S if cfg.is_global_layer(i) else min(S, cfg.window))
+            cache += 2.0 * B * s_eff * cfg.kv_dim * 2
+        hbm = 2.0 * nt / tp + cache / chips + 2.0 * B * d * V / chips
+    return CellCost(flops, hbm, model)

@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+No device allocation: these drive `.lower()` in the dry-run and shape logic
+in benchmarks. Modality frontends are stubs per the assignment: whisper gets
+precomputed conv-frontend frames, qwen2-vl gets precomputed patch embeddings
+and (B, 3, S) M-RoPE positions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    batch = {
+        "tokens": SDS((B, S), jnp.int32),
+        "labels": SDS((B, S), jnp.int32),
+    }
+    if cfg.encoder_decoder:
+        batch["frames"] = SDS((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = SDS((B, cfg.vision_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+        batch["positions"] = SDS((B, 3, S), jnp.int32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    b = train_batch_specs(cfg, B, S)
+    b.pop("labels")
+    return b
+
+
+def decode_specs(cfg: ModelConfig, B: int, S: int):
+    """(tokens, pos) specs + abstract cache for one decode step at a full
+    cache of length S."""
+    from repro.models.lm import transformer
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, S, jnp.bfloat16))
+    tokens = SDS((B, 1), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return cache, tokens, pos
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Returns (kind, specs...) for the cell."""
+    if shape.kind == "train":
+        return ("train", train_batch_specs(cfg, shape.global_batch,
+                                           shape.seq_len))
+    if shape.kind == "prefill":
+        return ("prefill", prefill_batch_specs(cfg, shape.global_batch,
+                                               shape.seq_len))
+    return ("decode",) + decode_specs(cfg, shape.global_batch, shape.seq_len)
+
+
+def materialize(specs, key=0):
+    """Concrete random arrays matching `specs` (for smoke tests/benches)."""
+    rng = jax.random.key(key)
+
+    def make(s):
+        nonlocal rng
+        rng, k = jax.random.split(rng)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jax.random.randint(k, s.shape, 0, 100, s.dtype)
+        return jax.random.normal(k, s.shape, s.dtype)
+
+    return jax.tree.map(make, specs)

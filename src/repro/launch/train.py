@@ -1,0 +1,113 @@
+"""Unified training launcher: ``--arch <id>`` selects any assigned LM
+architecture or a GNN model (the paper's pipeline).
+
+    PYTHONPATH=src python -m repro.launch.train --arch graphsage \
+        --dataset reddit-like --policy comm_rand --mix 0.125 --p 1.0
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-72b \
+        --reduced --steps 100 --ckpt-dir /tmp/ck
+
+LM archs run the fault-tolerant loop (checkpoint/resume, straggler monitor,
+optional int8 grad compression). Full-size LM configs require a real
+TPU/multi-host environment; ``--reduced`` runs the smoke-scale variant
+anywhere. GNN archs train for real on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs.base import CommRandPolicy, GNNConfig, TrainConfig
+from repro.configs.registry import GNN_ARCHS, LM_ARCHS, get_config
+
+
+def train_lm(args):
+    from repro.data.pipeline import (BlockShuffler, LMStream,
+                                     SyntheticTokens)
+    from repro.train.lm_loop import LMTrainer
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(learning_rate=args.lr, remat=not args.reduced,
+                       grad_compression=args.compress_grads,
+                       microbatches=args.microbatches)
+    corpus = SyntheticTokens(cfg.vocab_size, num_docs=4096,
+                             doc_len=args.seq * 2)
+    stream = LMStream(corpus, args.batch, args.seq,
+                      BlockShuffler(corpus.num_docs, 64,
+                                    mode=args.shuffle_mode))
+    mesh = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    tr = LMTrainer(cfg, tcfg, stream, ckpt_dir=args.ckpt_dir, mesh=mesh,
+                   ckpt_every=args.ckpt_every)
+    if tr.step:
+        print(f"resumed from step {tr.step}")
+    r = tr.run(args.steps)
+    print(f"{args.arch}: steps={args.steps} loss {r['loss_first']:.4f} -> "
+          f"{r['loss_last']:.4f} stragglers={r['straggler_fraction']:.1%}")
+
+
+def train_gnn(args):
+    from repro.core.reorder import prepare
+    from repro.graphs import synthetic
+    from repro.train.gnn_loop import GNNTrainer
+
+    g = prepare(synthetic.load(args.dataset), oracle=args.oracle)
+    base = get_config(args.arch)
+    cfg = GNNConfig(f"{args.arch}-{args.dataset}", base.model,
+                    base.num_layers, base.hidden_dim, g.feat_dim,
+                    g.num_classes, fanout=base.fanout)
+    pol = CommRandPolicy(args.policy, args.mix, args.p)
+    tcfg = TrainConfig(batch_size=args.batch, max_epochs=args.epochs,
+                       learning_rate=args.lr)
+    print(f"{cfg.model} on {g.name}: {g.num_nodes} nodes, "
+          f"{g.communities.max() + 1} communities, policy "
+          f"{pol.describe()}")
+    tr = GNNTrainer(g, cfg, tcfg, pol, seed=args.seed).warmup()
+    res = tr.fit(verbose=True)
+    print(f"val={res.val_acc:.4f} test={res.test_acc:.4f} "
+          f"epochs={res.epochs_to_converge} "
+          f"per_epoch={res.per_epoch_time_s:.2f}s total={res.total_time_s:.1f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    choices=list(LM_ARCHS) + list(GNN_ARCHS))
+    # shared
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    # LM
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--shuffle-mode", default="block",
+                    choices=["rand", "block", "none"])
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi"])
+    # GNN
+    ap.add_argument("--dataset", default="reddit-like")
+    ap.add_argument("--policy", default="comm_rand",
+                    choices=["rand", "norand", "comm_rand"])
+    ap.add_argument("--mix", type=float, default=0.125)
+    ap.add_argument("--p", type=float, default=1.0)
+    ap.add_argument("--epochs", type=int, default=30)
+    ap.add_argument("--oracle", action="store_true",
+                    help="use planted communities instead of Louvain")
+    args = ap.parse_args()
+    if args.arch in LM_ARCHS:
+        args.batch = args.batch or 8
+        train_lm(args)
+    else:
+        args.batch = args.batch or 1024
+        train_gnn(args)
+
+
+if __name__ == "__main__":
+    main()

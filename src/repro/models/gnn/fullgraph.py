@@ -1,0 +1,49 @@
+"""Subgraph / full-graph GNN execution (ClusterGCN batches + the full-batch
+training baseline from paper §2).
+
+Unlike the sampled tower (`apply_gnn`), these run L layers over ONE node set
+with an explicit padded edge list, using segment-sum aggregation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class SubgraphBatch:
+    nodes: jnp.ndarray        # (cap_n,) node ids (sentinel-padded)
+    node_mask: jnp.ndarray    # (cap_n,)
+    edge_src: jnp.ndarray     # (cap_e,) positions into nodes
+    edge_dst: jnp.ndarray     # (cap_e,)
+    edge_mask: jnp.ndarray    # (cap_e,)
+    labels: jnp.ndarray       # (cap_n,)
+    loss_mask: jnp.ndarray    # (cap_n,) train-root indicator
+
+
+def sage_subgraph_apply(cfg: GNNConfig, params, batch: SubgraphBatch, x,
+                        *, train=False, dropout_key=None):
+    """Mean-aggregator SAGE over an explicit edge list."""
+    n = batch.nodes.shape[0]
+    x = x * batch.node_mask[:, None].astype(x.dtype)
+    for i, p in enumerate(params["layers"]):
+        m = batch.edge_mask.astype(x.dtype)
+        msg = x[batch.edge_src] * m[:, None]
+        agg = jax.ops.segment_sum(msg, batch.edge_dst, num_segments=n)
+        cnt = jax.ops.segment_sum(m, batch.edge_dst, num_segments=n)
+        mean = agg / jnp.maximum(cnt, 1.0)[:, None]
+        x = x @ p["w_self"] + mean @ p["w_neigh"] + p["b"]
+        if i < len(params["layers"]) - 1:
+            x = jax.nn.relu(x)
+            if train and cfg.dropout > 0 and dropout_key is not None:
+                keep = 1.0 - cfg.dropout
+                mk = jax.random.bernoulli(
+                    jax.random.fold_in(dropout_key, i), keep, x.shape)
+                x = jnp.where(mk, x / keep, 0.0)
+        x = x * batch.node_mask[:, None].astype(x.dtype)
+    return x

@@ -1,0 +1,147 @@
+"""GNN model zoo on static-shape mini-batch towers: GraphSAGE (paper's
+primary), GCN and GAT (paper §6.4).
+
+All layers consume a `Block` (dense (n_dst, fanout) source-position gather +
+self position), so aggregation is a masked mean/attention over the fanout
+axis — the shape the `gather_mean` Pallas kernel targets.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.core.minibatch import Block, MiniBatch
+from repro.models.lm.common import dense_init
+
+Params = Dict
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_gnn(cfg: GNNConfig, key) -> Params:
+    dims = [cfg.in_dim] + [cfg.hidden_dim] * (cfg.num_layers - 1) \
+        + [cfg.num_classes]
+    layers = []
+    for i in range(cfg.num_layers):
+        k = jax.random.fold_in(key, i)
+        ks = jax.random.split(k, 6)
+        din, dout = dims[i], dims[i + 1]
+        if cfg.model == "sage":
+            layers.append({
+                "w_self": dense_init(ks[0], (din, dout)),
+                "w_neigh": dense_init(ks[1], (din, dout)),
+                "b": jnp.zeros((dout,)),
+            })
+        elif cfg.model == "gcn":
+            layers.append({
+                "w": dense_init(ks[0], (din, dout)),
+                "b": jnp.zeros((dout,)),
+            })
+        elif cfg.model == "gat":
+            H = cfg.gat_heads
+            dh = max(dout // H, 1)
+            layers.append({
+                "w": dense_init(ks[0], (din, H * dh)),
+                "a_src": dense_init(ks[1], (H, dh)) * 0.1,
+                "a_dst": dense_init(ks[2], (H, dh)) * 0.1,
+                "b": jnp.zeros((H * dh,)),
+                "w_out": dense_init(ks[3], (H * dh, dout))
+                if H * dh != dout else None,
+            })
+        else:
+            raise ValueError(cfg.model)
+    return {"layers": layers}
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+def _masked_mean(x_src, block: Block):
+    """x_src: (n_src, D) -> (n_dst, D) mean over sampled neighbor slots."""
+    g = x_src[block.src_pos]                          # (n_dst, r, D)
+    m = block.edge_mask[..., None].astype(x_src.dtype)
+    s = (g * m).sum(axis=1)
+    cnt = jnp.maximum(m.sum(axis=1), 1.0)
+    return s / cnt
+
+
+def sage_layer(p, x_src, block: Block):
+    h_self = x_src[block.self_pos]
+    h_nbr = _masked_mean(x_src, block)
+    return h_self @ p["w_self"] + h_nbr @ p["w_neigh"] + p["b"]
+
+
+def gcn_layer(p, x_src, block: Block, deg_src, deg_dst):
+    """Symmetric-normalized aggregation with self loops (global degrees)."""
+    g = x_src[block.src_pos]                          # (n_dst, r, D)
+    m = block.edge_mask[..., None].astype(x_src.dtype)
+    cnt = jnp.maximum(block.edge_mask.sum(axis=1, keepdims=True), 1)
+    # sampled-edge weight: deg_dst/r compensates fanout subsampling
+    c_src = jax.lax.rsqrt(deg_src[block.src_pos].astype(jnp.float32) + 1.0)
+    c_dst = jax.lax.rsqrt(deg_dst.astype(jnp.float32) + 1.0)
+    w = (c_src * (deg_dst[:, None] / cnt)
+         )[..., None].astype(x_src.dtype)
+    agg = (g * m * w).sum(axis=1)
+    h_self = x_src[block.self_pos] * (c_dst * c_dst)[:, None].astype(
+        x_src.dtype)
+    return (agg * c_dst[:, None].astype(x_src.dtype) + h_self) @ p["w"] \
+        + p["b"]
+
+
+def gat_layer(p, x_src, block: Block):
+    H, dh = p["a_src"].shape
+    z = x_src @ p["w"]                                # (n_src, H*dh)
+    z = z.reshape(z.shape[0], H, dh)
+    z_nbr = z[block.src_pos]                          # (n_dst, r, H, dh)
+    z_self = z[block.self_pos]                        # (n_dst, H, dh)
+    e_src = jnp.einsum("nrhd,hd->nrh", z_nbr, p["a_src"])
+    e_dst = jnp.einsum("nhd,hd->nh", z_self, p["a_dst"])
+    e_self = jnp.einsum("nhd,hd->nh", z_self, p["a_src"]) + e_dst
+    e = jax.nn.leaky_relu(e_src + e_dst[:, None], 0.2)  # (n_dst, r, H)
+    e = jnp.where(block.edge_mask[..., None], e, -1e30)
+    e_all = jnp.concatenate(
+        [e, jax.nn.leaky_relu(e_self)[:, None]], axis=1)  # + self edge
+    alpha = jax.nn.softmax(e_all, axis=1)
+    vals = jnp.concatenate([z_nbr, z_self[:, None]], axis=1)
+    out = jnp.einsum("nrh,nrhd->nhd", alpha, vals).reshape(
+        z_self.shape[0], H * dh) + p["b"]
+    if p.get("w_out") is not None:
+        out = out @ p["w_out"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# full model over a batch tower
+# ---------------------------------------------------------------------------
+def apply_gnn(cfg: GNNConfig, params: Params, batch: MiniBatch, x,
+              degrees=None, *, train: bool = False, dropout_key=None):
+    """x: (cap_L, in_dim) gathered input features (masked). Returns logits
+    aligned with batch.roots order."""
+    x = x * batch.node_mask[:, None].astype(x.dtype)
+    L = len(batch.blocks)
+    for i, block in enumerate(batch.blocks):
+        p = params["layers"][i]
+        if cfg.model == "sage":
+            x = sage_layer(p, x, block)
+        elif cfg.model == "gcn":
+            # per-level degrees gathered from the global degree array;
+            # blocks[i] maps level (L-i) -> (L-i-1)
+            n = degrees.shape[0]
+            d_src = degrees[jnp.minimum(batch.levels[L - i], n - 1)]
+            d_dst = degrees[jnp.minimum(batch.levels[L - i - 1], n - 1)]
+            x = gcn_layer(p, x, block, d_src, d_dst)
+        else:
+            x = gat_layer(p, x, block)
+        x = x * block.dst_mask[:, None].astype(x.dtype)
+        if i < len(batch.blocks) - 1:
+            x = jax.nn.relu(x)
+            if train and cfg.dropout > 0 and dropout_key is not None:
+                keep = 1.0 - cfg.dropout
+                mask = jax.random.bernoulli(
+                    jax.random.fold_in(dropout_key, i), keep, x.shape)
+                x = jnp.where(mask, x / keep, 0.0)
+    return x

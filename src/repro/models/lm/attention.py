@@ -1,0 +1,187 @@
+"""Attention: flash-style chunked jnp attention (custom VJP) for
+train/prefill and KV-cache attention for decode.
+
+`flash_attention` scans KV chunks with an online softmax so the (S, S) score
+matrix never materializes, and carries a *custom VJP*: the backward pass
+recomputes per-chunk probabilities from (q, k, v, out, lse) instead of
+letting autodiff save every chunk's softmax state — this is what keeps the
+32k-prefill / 4k-train cells inside 16 GiB/chip. The Pallas kernel
+(`repro.kernels.flash_attention`) mirrors the same computation for real TPUs
+and is validated against `attention_ref`.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _mask(q_pos, kv_pos, *, causal, window, is_global):
+    """(Sq, C) boolean mask. `is_global` may be a traced scalar."""
+    ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        ok = ok & (kv_pos[None, :] <= q_pos[:, None])
+    win_ok = (q_pos[:, None] - kv_pos[None, :]) < window
+    ok = ok & (is_global | win_ok)
+    return ok
+
+
+def attention_ref(q, k, v, *, causal=True, window=1 << 30, is_global=True,
+                  q_offset=0):
+    """Naive O(S^2) oracle. q (B,Sq,H,D); k/v (B,Skv,KH,D)."""
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qr = q.reshape(B, Sq, KH, G, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(D)
+    q_pos = q_offset + jnp.arange(Sq)
+    kv_pos = jnp.arange(k.shape[1])
+    m = _mask(q_pos, kv_pos, causal=causal, window=window, is_global=is_global)
+    scores = jnp.where(m[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention with custom VJP
+# ---------------------------------------------------------------------------
+def _fwd_scan(q, k, v, is_global, *, causal, window, q_offset, chunk):
+    B, Sq, H, D = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    n_chunks = Skv // chunk
+    qf = q.astype(jnp.float32).reshape(B, Sq, KH, G, D)
+    scale = 1.0 / np.sqrt(D)
+    q_pos = q_offset + jnp.arange(Sq)
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, KH, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, KH, D), 1, 0)
+
+    def body(carry, inp):
+        m_i, l_i, acc = carry
+        kci, vci, c_idx = inp
+        kv_pos = c_idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf,
+                       kci.astype(jnp.float32)) * scale
+        msk = _mask(q_pos, kv_pos, causal=causal, window=window,
+                    is_global=is_global)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_i * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vci.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((B, KH, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, Sq, D), jnp.float32)
+    (m_f, l_f, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    l_safe = jnp.maximum(l_f, 1e-30)
+    out = acc / l_safe[..., None]                       # (B,KH,G,Sq,D)
+    lse = m_f + jnp.log(l_safe)
+    out_b = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, Sq, H, D)
+    return out_b.astype(q.dtype), out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _flash(q, k, v, is_global, causal, window, q_offset, chunk):
+    out, _, _ = _fwd_scan(q, k, v, is_global, causal=causal, window=window,
+                          q_offset=q_offset, chunk=chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, is_global, causal, window, q_offset, chunk):
+    out, out32, lse = _fwd_scan(q, k, v, is_global, causal=causal,
+                                window=window, q_offset=q_offset, chunk=chunk)
+    return out, (q, k, v, is_global, out32, lse)
+
+
+def _flash_bwd(causal, window, q_offset, chunk, res, dout):
+    q, k, v, is_global, out32, lse = res
+    B, Sq, H, D = q.shape
+    Skv, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    n_chunks = Skv // chunk
+    scale = 1.0 / np.sqrt(D)
+    qf = q.astype(jnp.float32).reshape(B, Sq, KH, G, D)
+    do = dout.astype(jnp.float32).reshape(B, Sq, KH, G, D)
+    do = jnp.transpose(do, (0, 2, 3, 1, 4))            # (B,KH,G,Sq,D)
+    delta = jnp.sum(do * out32, axis=-1)               # (B,KH,G,Sq)
+    q_pos = q_offset + jnp.arange(Sq)
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, chunk, KH, D), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, chunk, KH, D), 1, 0)
+
+    def body(dq_acc, inp):
+        kci, vci, c_idx = inp
+        kv_pos = c_idx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qf,
+                       kci.astype(jnp.float32)) * scale
+        msk = _mask(q_pos, kv_pos, causal=causal, window=window,
+                    is_global=is_global)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                 # (B,KH,G,Sq,C)
+        dv = jnp.einsum("bkgqs,bkgqd->bskd", p, do)
+        dp = jnp.einsum("bkgqd,bskd->bkgqs", do, vci.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq_acc = dq_acc + jnp.einsum("bkgqs,bskd->bkgqd", ds,
+                                     kci.astype(jnp.float32))
+        dk = jnp.einsum("bkgqs,bqkgd->bskd", ds, qf)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, KH, G, Sq, D), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0,
+                                  (kc, vc, jnp.arange(n_chunks)))
+    dq = jnp.transpose(dq, (0, 3, 1, 2, 4)).reshape(B, Sq, H, D)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Skv, KH, D)
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Skv, KH, D)
+    dg = np.zeros(np.shape(is_global), jax.dtypes.float0)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), dg)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, window=1 << 30, is_global=True,
+                    q_offset=0, chunk=512):
+    """Online-softmax attention over KV chunks; O(Sq*chunk) live memory in
+    both forward and backward."""
+    Skv = k.shape[1]
+    if Skv % chunk != 0:
+        chunk = Skv                                   # tiny/smoke shapes
+    if isinstance(is_global, bool):
+        is_global = jnp.asarray(is_global)
+    return _flash(q, k, v, is_global, causal, window, q_offset, chunk)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=1 << 30,
+                     is_global=True):
+    """Single-token attention over a (possibly sequence-sharded) KV cache.
+
+    q: (B, 1, H, D); caches: (B, S, KH, D); pos: scalar int (current index).
+    Softmax reductions over the cache axis are written explicitly so the SPMD
+    partitioner inserts the flash-decoding style partial max / denominator
+    all-reduces when the cache is sharded over `model`.
+    """
+    B, _, H, D = q.shape
+    S, KH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KH
+    qf = q.astype(jnp.float32).reshape(B, KH, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
+    s = s / np.sqrt(D)
+    kv_pos = jnp.arange(S)
+    ok = kv_pos <= pos
+    ok = ok & (is_global | ((pos - kv_pos) < window))
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p / denom, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)

@@ -1,0 +1,101 @@
+"""Shared LM building blocks: norms, activations, RoPE/M-RoPE, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, in_axis=-2, dtype=jnp.float32):
+    """LeCun-normal in fp32 (params are stored fp32, computed in bf16)."""
+    fan_in = shape[in_axis] if len(shape) > 1 else shape[0]
+    return jax.random.normal(key, shape, dtype) * (1.0 / np.sqrt(fan_in))
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return ((1.0 + scale.astype(jnp.float32)) * out).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def norm_apply(cfg, x, p):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+def norm_init(cfg, d):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))}
+    return {"scale": jnp.zeros((d,))}   # rmsnorm stores (scale-1)
+
+
+def activation(name):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim, theta):
+    half = head_dim // 2
+    return theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x, positions, theta, mrope_sections=None):
+    """x: (B, S, H, D). positions: (B, S) or (B, 3, S) for M-RoPE.
+
+    M-RoPE (qwen2-vl): the D/2 rotary frequencies are split into
+    `mrope_sections` groups, each driven by the temporal / height / width
+    position component respectively.
+    """
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)          # (half,)
+    if positions.ndim == 3:                         # M-RoPE
+        sections = mrope_sections
+        assert sections is not None and sum(sections) == half
+        comp = jnp.concatenate(
+            [jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+        pos = jnp.transpose(positions.astype(jnp.float32), (0, 2, 1))  # (B,S,3)
+        pos = jnp.take(pos, comp, axis=-1)          # (B, S, half)
+        angles = pos * freqs[None, None, :]
+    else:
+        angles = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,half)
+    cos = jnp.cos(angles)[:, :, None, :]            # (B, S, 1, half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq, d):
+    """Whisper-style sinusoidal embeddings (fp32, (seq, d))."""
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * dim / d)
+    return jnp.asarray(
+        np.concatenate([np.sin(angle), np.cos(angle)], axis=1), jnp.float32)

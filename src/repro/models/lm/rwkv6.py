@@ -1,0 +1,177 @@
+"""RWKV6 "Finch" token mixing: data-dependent decay linear attention.
+
+Two equivalent implementations:
+  - ``wkv6_scan``  — exact per-timestep recurrence (oracle; decode path)
+  - ``wkv6_chunked`` — chunked matmul form used for train/prefill: chunks of
+    ``CHUNK`` steps are processed with dense (C,C) intra-chunk matmuls and a
+    scanned inter-chunk state, with ``jax.checkpoint`` on the chunk body so
+    the backward pass stores only chunk-boundary states. The Pallas kernel
+    (`repro.kernels.rwkv6_chunk`) mirrors this form.
+
+Decay logits are clamped to [LOGW_MIN, LOGW_MAX] so the factored
+exp(cum_prev[t] - cum[s]) intra-chunk term stays inside fp32 range
+(|LOGW_MIN| * CHUNK < 88). Simplification vs the released model: the
+r/k/v/g mix coefficients are static per-channel (v5-style) while the decay
+keeps the v6 data-dependent LoRA; recorded in DESIGN.md §7.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.common import dense_init
+
+CHUNK = 16
+LOGW_MIN = -5.0
+LOGW_MAX = -1e-4
+
+
+def init_time_mix(key, cfg):
+    d = cfg.d_model
+    H, N = cfg.num_heads, cfg.head_dim
+    lora = 64
+    ks = jax.random.split(key, 10)
+    return {
+        "mu": jax.random.uniform(ks[0], (5, d)),          # r,k,v,g,w lerp
+        "w0": jnp.zeros((d,)) - 0.6,                       # base decay logit
+        "wa_decay": dense_init(ks[1], (d, lora)) * 0.1,
+        "wb_decay": dense_init(ks[2], (lora, d)) * 0.1,
+        "wr_t": dense_init(ks[3], (d, H * N)),
+        "wk_t": dense_init(ks[4], (d, H * N)),
+        "wv_t": dense_init(ks[5], (d, H * N)),
+        "wg_t": dense_init(ks[6], (d, H * N)),
+        "u": jax.random.normal(ks[7], (H, N)) * 0.1,       # bonus
+        "ln_x": jnp.ones((H, N)),                          # per-head norm
+        "wo": dense_init(ks[8], (H * N, d)),
+    }
+
+
+def init_channel_mix(key, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_c": jax.random.uniform(ks[0], (2, d)),         # k, r lerp
+        "wck": dense_init(ks[1], (d, ff)),
+        "wcv": dense_init(ks[2], (ff, d)),
+        "wcr": dense_init(jax.random.fold_in(key, 7), (d, d)),
+    }
+
+
+def token_shift(x, prev):
+    """x: (B, T, d); prev: (B, 1, d) last token of previous segment."""
+    return jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# WKV6 core
+# ---------------------------------------------------------------------------
+def wkv6_scan(r, k, v, logw, u, s0):
+    """Exact recurrence. r/k/v/logw: (B,T,H,N); u: (H,N); s0: (B,H,N,N).
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ; out_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+    Returns (out (B,T,H,N), s_final).
+    """
+    w = jnp.exp(logw.astype(jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                    # (B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]                # (B,H,N,N)
+        out = jnp.einsum("bhn,bhnm->bhm", rt, s + u[..., None] * kv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    s_f, out = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(out, 0, 1).astype(r.dtype), s_f
+
+
+def wkv6_chunked(r, k, v, logw, u, s0, chunk=CHUNK):
+    """Chunked matmul form (see module docstring). Same signature as scan."""
+    B, T, H, N = r.shape
+    if T % chunk != 0:
+        return wkv6_scan(r, k, v, logw, u, s0)
+    nc = T // chunk
+
+    def reshape(a):
+        return a.astype(jnp.float32).reshape(B, nc, chunk, H, N)
+
+    rc, kc, vc, wc = map(reshape, (r, k, v, logw))
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+
+    @jax.checkpoint
+    def body(s, inp):
+        rt, kt, vt, lw = inp                                    # (B,C,H,N)
+        cum = jnp.cumsum(lw, axis=1)                            # inclusive
+        cum_prev = cum - lw
+        q_dec = rt * jnp.exp(cum_prev)                          # <= |r|
+        k_dec = kt * jnp.exp(-cum)                              # <= e^{|LOGW_MIN|*C}
+        scores = jnp.einsum("bihn,bjhn->bhij", q_dec, k_dec) * tri
+        diag = jnp.einsum("bihn,hn,bihn->bhi", rt, u, kt)
+        scores = scores + diag[..., :, None] * jnp.eye(chunk, dtype=jnp.float32)
+        out = jnp.einsum("bhij,bjhn->bihn", scores, vt)
+        out = out + jnp.einsum("bihn,bhnm->bihm", q_dec, s)
+        last = cum[:, -1]                                       # (B,H,N)
+        k_rem = kt * jnp.exp(last[:, None] - cum)               # <= |k|
+        s = jnp.exp(last)[..., None] * s + \
+            jnp.einsum("bjhn,bjhm->bhnm", k_rem, vt)
+        return s, out
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, wc))
+    s_f, out = jax.lax.scan(body, s0.astype(jnp.float32), xs)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, T, H, N)
+    return out.astype(r.dtype), s_f
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _project(x, p, cfg, shift_prev):
+    B, T, d = x.shape
+    H, N = cfg.num_heads, cfg.head_dim
+    xs = token_shift(x, shift_prev)
+    mu = p["mu"].astype(x.dtype)
+    mix = lambda i: x * mu[i] + xs * (1.0 - mu[i])
+    r = (mix(0) @ p["wr_t"].astype(x.dtype)).reshape(B, T, H, N)
+    k = (mix(1) @ p["wk_t"].astype(x.dtype)).reshape(B, T, H, N)
+    v = (mix(2) @ p["wv_t"].astype(x.dtype)).reshape(B, T, H, N)
+    g = jax.nn.silu(mix(3) @ p["wg_t"].astype(x.dtype))
+    xw = mix(4).astype(jnp.float32)
+    lora = jnp.tanh(xw @ p["wa_decay"]) @ p["wb_decay"]
+    logw = -jnp.exp(p["w0"] + lora)                             # (B,T,d) < 0
+    logw = jnp.clip(logw, LOGW_MIN, LOGW_MAX).reshape(B, T, H, N)
+    return r, k, v, g, logw
+
+
+def _head_norm(out, p, cfg):
+    B, T, H, N = out.shape
+    o32 = out.astype(jnp.float32)
+    var = jnp.mean(o32 * o32, axis=-1, keepdims=True)
+    o32 = o32 * jax.lax.rsqrt(var + 64e-5) * p["ln_x"]
+    return o32.reshape(B, T, H * N)
+
+
+def time_mix(x, p, cfg, state=None, chunked=True):
+    """state: None (train, zeros) or dict(shift=(B,1,d), s=(B,H,N,N))."""
+    B, T, d = x.shape
+    H, N = cfg.num_heads, cfg.head_dim
+    shift_prev = state["shift"] if state else jnp.zeros((B, 1, d), x.dtype)
+    s0 = state["s"] if state else jnp.zeros((B, H, N, N), jnp.float32)
+    r, k, v, g, logw = _project(x, p, cfg, shift_prev)
+    fn = wkv6_chunked if chunked else wkv6_scan
+    out, s_f = fn(r, k, v, logw, p["u"].astype(jnp.float32), s0)
+    out = _head_norm(out, p, cfg).astype(x.dtype) * g
+    y = out @ p["wo"].astype(x.dtype)
+    new_state = {"shift": x[:, -1:], "s": s_f}
+    return y, new_state
+
+
+def channel_mix(x, p, cfg, state=None):
+    B, T, d = x.shape
+    shift_prev = state if state is not None else jnp.zeros((B, 1, d), x.dtype)
+    xs = token_shift(x, shift_prev)
+    mu = p["mu_c"].astype(x.dtype)
+    xk = x * mu[0] + xs * (1.0 - mu[0])
+    xr = x * mu[1] + xs * (1.0 - mu[1])
+    kk = jnp.square(jax.nn.relu(xk @ p["wck"].astype(x.dtype)))
+    rr = jax.nn.sigmoid(xr @ p["wcr"].astype(x.dtype))
+    return rr * (kk @ p["wcv"].astype(x.dtype)), x[:, -1:]

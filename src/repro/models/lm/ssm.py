@@ -1,0 +1,103 @@
+"""Mamba-style selective SSM head (hymba's parallel-SSM branch).
+
+State: h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) * B_t ; y_t = C_t . h_t + D*x_t
+Train/prefill use a chunk-checkpointed scan (boundary states only are saved
+for backward); decode carries (conv window, h state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.common import dense_init
+
+CONV_W = 4
+SSM_CHUNK = 64
+
+
+def init_ssm(key, cfg):
+    d = cfg.d_model
+    di = d                       # inner width = d_model (see DESIGN.md §7)
+    N = cfg.ssm_state
+    rank = max(8, d // 16)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di)),
+        "conv_w": dense_init(ks[1], (CONV_W, di)) * 0.5,
+        "conv_b": jnp.zeros((di,)),
+        "wdt_down": dense_init(ks[2], (di, rank)),
+        "wdt_up": dense_init(ks[3], (rank, di)) * 0.1,
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((di,), 0.01))),  # softplus^-1
+        "wb_ssm": dense_init(ks[4], (di, N)),
+        "wc_ssm": dense_init(ks[5], (di, N)),
+        "a_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))),
+        "d_skip": jnp.ones((di,)),
+        "out_proj": dense_init(ks[6], (di, d)),
+    }
+
+
+def _causal_conv(x, w, b, prev):
+    """Depthwise causal conv width CONV_W. prev: (B, CONV_W-1, di)."""
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(CONV_W))
+    return jax.nn.silu(out + b)
+
+
+def _ssm_scan(decay, u, c, h0):
+    """decay/u: (B,T,di,N); c: (B,T,N); h0: (B,di,N) -> y (B,T,di), h_f."""
+    T = decay.shape[1]
+    nc = T // SSM_CHUNK if T % SSM_CHUNK == 0 and T >= SSM_CHUNK else 1
+    cs = T // nc
+
+    def inner(h, inp):
+        d_t, u_t, c_t = inp
+        h = d_t * h + u_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    @jax.checkpoint
+    def chunk_body(h, inp):
+        d_c, u_c, c_c = inp                      # (B, cs, di, N) / (B, cs, N)
+        xs = (jnp.moveaxis(d_c, 1, 0), jnp.moveaxis(u_c, 1, 0),
+              jnp.moveaxis(c_c, 1, 0))
+        h, ys = jax.lax.scan(inner, h, xs)
+        return h, jnp.moveaxis(ys, 0, 1)
+
+    def chunks(a):
+        return jnp.moveaxis(
+            a.reshape(a.shape[0], nc, cs, *a.shape[2:]), 1, 0)
+
+    h_f, ys = jax.lax.scan(chunk_body, h0, (chunks(decay), chunks(u),
+                                            chunks(c)))
+    ys = jnp.moveaxis(ys, 0, 1).reshape(decay.shape[0], T, -1)
+    return ys, h_f
+
+
+def ssm_block(x, p, cfg, state=None):
+    """x: (B, T, d). state: None or dict(conv=(B,3,di), h=(B,di,N))."""
+    B, T, d = x.shape
+    N = cfg.ssm_state
+    dtype = x.dtype
+    xz = x @ p["in_proj"].astype(dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_prev = state["conv"].astype(dtype) if state else \
+        jnp.zeros((B, CONV_W - 1, xi.shape[-1]), dtype)
+    xc = _causal_conv(xi, p["conv_w"].astype(dtype), p["conv_b"].astype(dtype),
+                      conv_prev)
+    xc32 = xc.astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (xc32 @ p["wdt_down"]) @ p["wdt_up"] + p["dt_bias"])     # (B,T,di)
+    Bm = xc32 @ p["wb_ssm"]                                      # (B,T,N)
+    Cm = xc32 @ p["wc_ssm"]
+    A = -jnp.exp(p["a_log"])                                     # (di,N)
+    decay = jnp.exp(dt[..., None] * A)                           # (B,T,di,N)
+    u = (dt * xc32)[..., None] * Bm[:, :, None, :]
+    h0 = state["h"] if state else jnp.zeros((B, xc.shape[-1], N), jnp.float32)
+    y, h_f = _ssm_scan(decay, u, Cm, h0)
+    y = y + xc32 * p["d_skip"]
+    y = (y.astype(dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(dtype)
+    new_state = {"conv": jnp.concatenate([conv_prev, xi], 1)[:, -(CONV_W - 1):],
+                 "h": h_f}
+    return out, new_state

@@ -1,0 +1,495 @@
+"""Generic LM-family model covering all 10 assigned architectures.
+
+One functional model: ``init`` builds an fp32 param pytree with layer params
+stacked on a leading L axis (scan-over-layers); ``apply`` runs train/prefill;
+``decode_step`` runs one serving step against a cache pytree. Family dispatch
+(dense / moe / rwkv / hybrid / enc-dec / vlm) happens inside the layer body.
+
+Sharding is injected through `repro.dist.sharding` activation constraints,
+which no-op outside a mesh context, so the same code runs CPU smoke tests and
+the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import sharding as shd
+from repro.models.lm import rwkv6, ssm
+from repro.models.lm.attention import decode_attention, flash_attention
+from repro.models.lm.common import (activation, apply_rope, dense_init,
+                                    embed_init, norm_apply, norm_init,
+                                    rmsnorm, sinusoidal_positions)
+from repro.models.lm.moe import init_moe, moe_ffn
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def _init_attn(key, cfg: ModelConfig, cross: bool = False):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, qd)),
+        "wk": dense_init(ks[1], (d, kvd)),
+        "wv": dense_init(ks[2], (d, kvd)),
+        "wo": dense_init(ks[3], (qd, d)),
+    }
+    if cfg.qkv_bias and not cross:
+        p.update({"bq": jnp.zeros((qd,)), "bk": jnp.zeros((kvd,)),
+                  "bv": jnp.zeros((kvd,))})
+    if cfg.qk_norm and not cross:
+        p.update({"qnorm": jnp.zeros((cfg.head_dim,)),
+                  "knorm": jnp.zeros((cfg.head_dim,))})
+    return p
+
+
+def _init_mlp(key, cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_bias:     # whisper-style plain MLP
+        return {"w1": dense_init(ks[0], (d, ff)), "b1": jnp.zeros((ff,)),
+                "w2": dense_init(ks[1], (ff, d)), "b2": jnp.zeros((d,))}
+    return {"wg": dense_init(ks[0], (d, ff)),
+            "wu": dense_init(ks[1], (d, ff)),
+            "wd": dense_init(ks[2], (ff, d))}
+
+
+def _init_layer(key, cfg: ModelConfig, *, decoder: bool):
+    ks = jax.random.split(key, 8)
+    p: Params = {"norm1": norm_init(cfg, cfg.d_model),
+                 "norm2": norm_init(cfg, cfg.d_model)}
+    if cfg.rwkv:
+        p["time"] = rwkv6.init_time_mix(ks[0], cfg)
+        p["chan"] = rwkv6.init_channel_mix(ks[1], cfg)
+        return p
+    p["attn"] = _init_attn(ks[0], cfg)
+    if cfg.hybrid:
+        p["ssm"] = ssm.init_ssm(ks[1], cfg)
+        p["norm_attn_out"] = {"scale": jnp.zeros((cfg.q_dim,))}
+        p["norm_ssm_out"] = {"scale": jnp.zeros((cfg.d_model,))}
+    if cfg.encoder_decoder and decoder:
+        p["cross"] = _init_attn(ks[2], cfg, cross=True)
+        p["norm_cross"] = norm_init(cfg, cfg.d_model)
+    if cfg.moe:
+        p["moe"] = init_moe(ks[3], cfg)
+    else:
+        p["mlp"] = _init_mlp(ks[4], cfg)
+    return p
+
+
+def init(cfg: ModelConfig, key, max_seq: int = 4096) -> Params:
+    ks = jax.random.split(key, 8)
+    V, d = cfg.padded_vocab, cfg.d_model
+
+    def stack_layers(key, n, decoder):
+        keys = jax.random.split(key, n)
+        return jax.vmap(lambda k: _init_layer(k, cfg, decoder=decoder))(keys)
+
+    params: Params = {
+        "embed": embed_init(ks[0], (V, d)),
+        "layers": stack_layers(ks[1], cfg.num_layers, True),
+        "final_norm": norm_init(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[2], (d, V))
+    if cfg.learned_pos:
+        params["pos_embed"] = embed_init(ks[3], (max_seq, d))
+    if cfg.encoder_decoder:
+        params["encoder"] = {
+            "enc_layers": stack_layers(ks[4], cfg.num_encoder_layers, False),
+            "final_norm": norm_init(cfg, d),
+        }
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(params)
+               if hasattr(x, "size"))
+
+
+def abstract_params(cfg: ModelConfig, max_seq: int = 4096):
+    """Shape-only param tree (no allocation) for the dry-run."""
+    return jax.eval_shape(
+        lambda k: init(cfg, k, max_seq), jax.random.key(0))
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+def _qkv(cfg, p, x, kv_src=None):
+    """Project to (B,S,H,hd)/(B,S,KH,hd). kv_src: cross-attn source."""
+    B, S, _ = x.shape
+    dt = x.dtype
+    src = x if kv_src is None else kv_src
+    q = x @ p["wq"].astype(dt)
+    k = src @ p["wk"].astype(dt)
+    v = src @ p["wv"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, src.shape[1], cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, src.shape[1], cfg.num_kv_heads, cfg.head_dim)
+    if "qnorm" in p:
+        q = rmsnorm(q, p["qnorm"], cfg.norm_eps)
+        k = rmsnorm(k, p["knorm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _attn_train(cfg, p, x, positions, is_global, *, causal=True,
+                kv_src=None, use_rope=True):
+    """Returns (pre-wo output (B,S,q_dim), (k, v) as stored in a cache)."""
+    q, k, v = _qkv(cfg, p, x, kv_src)
+    if use_rope and not cfg.learned_pos and kv_src is None:
+        q = apply_rope(q, positions, cfg.rope_theta,
+                       cfg.mrope_sections if cfg.mrope else None)
+        k = apply_rope(k, positions, cfg.rope_theta,
+                       cfg.mrope_sections if cfg.mrope else None)
+    q, k, v = shd.act_heads(q), shd.act_heads(k), shd.act_heads(v)
+    out = flash_attention(q, k, v, causal=causal, window=cfg.window,
+                          is_global=is_global)
+    out = shd.act_heads(out)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, cfg.q_dim), (k, v)
+
+
+def _mlp(cfg, p, x):
+    dt = x.dtype
+    act = activation(cfg.act)
+    if "w1" in p:
+        h = act(x @ p["w1"].astype(dt) + p["b1"].astype(dt))
+        return h @ p["w2"].astype(dt) + p["b2"].astype(dt)
+    h = act(x @ p["wg"].astype(dt)) * (x @ p["wu"].astype(dt))
+    return h @ p["wd"].astype(dt)
+
+
+def _ffn(cfg, p, x):
+    """Returns (out, aux)."""
+    if cfg.moe:
+        B, S, d = x.shape
+        y, aux = moe_ffn(x.reshape(B * S, d), p["moe"], cfg)
+        return y.reshape(B, S, d), aux
+    return _mlp(cfg, p["mlp"], x), jnp.float32(0)
+
+
+def _layer_train(cfg, p, x, positions, is_global, enc_out=None,
+                 collect=False):
+    """One decoder layer; returns (x, aux, cache_extras_or_None).
+
+    Pre-residual outputs get `act_partial_out` constraints so the TP
+    reductions lower as reduce-scatter into the sequence-parallel shard
+    (all-reduce + slice otherwise; see EXPERIMENTS.md §Perf)."""
+    extras = None
+    if cfg.rwkv:
+        y, st = rwkv6.time_mix(norm_apply(cfg, x, p["norm1"]), p["time"], cfg)
+        x = shd.act_residual(x + shd.act_partial_out(y))
+        y, sc = rwkv6.channel_mix(norm_apply(cfg, x, p["norm2"]), p["chan"],
+                                  cfg)
+        if collect:
+            extras = {"s": st["s"], "shift_t": st["shift"], "shift_c": sc}
+        return shd.act_residual(x + shd.act_partial_out(y)), \
+            jnp.float32(0), extras
+
+    h = norm_apply(cfg, x, p["norm1"])
+    attn_out, (k, v) = _attn_train(cfg, p["attn"], h, positions, is_global)
+    if collect:
+        extras = {"k": k, "v": v}
+    if cfg.hybrid:
+        ssm_out, sst = ssm.ssm_block(h, p["ssm"], cfg)
+        if collect:
+            extras.update(h=sst["h"], conv=sst["conv"])
+        attn_out = 0.5 * (rmsnorm(attn_out, p["norm_attn_out"]["scale"],
+                                  cfg.norm_eps) @ p["attn"]["wo"].astype(x.dtype)
+                          + rmsnorm(ssm_out, p["norm_ssm_out"]["scale"],
+                                    cfg.norm_eps))
+    else:
+        attn_out = attn_out @ p["attn"]["wo"].astype(x.dtype)
+    x = shd.act_residual(x + shd.act_partial_out(attn_out))
+
+    if enc_out is not None:
+        hc = norm_apply(cfg, x, p["norm_cross"])
+        c, _ = _attn_train(cfg, p["cross"], hc, positions, True, causal=False,
+                           kv_src=enc_out, use_rope=False)
+        c = shd.act_partial_out(c @ p["cross"]["wo"].astype(x.dtype))
+        x = shd.act_residual(x + c)
+
+    h2 = norm_apply(cfg, x, p["norm2"])
+    ff, aux = _ffn(cfg, p, h2)
+    return shd.act_residual(x + shd.act_partial_out(ff)), aux, extras
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _is_global_arr(cfg, n):
+    return jnp.array([cfg.is_global_layer(i) for i in range(n)])
+
+
+def _cast_layers(layers, dtype):
+    """Cast the big matmul weights to the compute dtype so FSDP all-gathers
+    move bf16 (fp32 masters stay in the optimizer). Small / numerics-
+    sensitive params (norms, decays, SSM projections) stay fp32."""
+    keep_exact = {"scale", "bias", "ln_x", "w0", "mu", "u", "mu_c",
+                  "a_log", "dt_bias", "wa_decay", "wb_decay", "d_skip",
+                  "wdt_down", "wdt_up", "wb_ssm", "wc_ssm", "conv_w",
+                  "conv_b", "qnorm", "knorm", "router", "sgate"}
+
+    def f(kp, w):
+        parts = [str(getattr(k, "key", k)) for k in kp]
+        if w.dtype == jnp.float32 and \
+                not any(p in keep_exact or "norm" in p for p in parts):
+            return w.astype(dtype)
+        return w
+
+    return jax.tree_util.tree_map_with_path(f, layers)
+
+
+def _embed_tokens(cfg, params, tokens, dtype):
+    x = jnp.take(params["embed"].astype(dtype), tokens, axis=0)
+    if cfg.tie_embeddings:          # gemma convention: scaled embeddings
+        x = x * jnp.asarray(jnp.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def encode(cfg: ModelConfig, params: Params, frames) -> jax.Array:
+    """Whisper encoder over precomputed conv-frontend frames (B, Senc, d)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = frames.astype(dtype) + sinusoidal_positions(
+        frames.shape[1], cfg.d_model).astype(dtype)[None]
+    enc = params["encoder"]
+    positions = jnp.broadcast_to(jnp.arange(frames.shape[1]),
+                                 frames.shape[:2])
+
+    def body(x, p):
+        h = norm_apply(cfg, x, p["norm1"])
+        a, _ = _attn_train(cfg, p["attn"], h, positions, True, causal=False,
+                           use_rope=False)
+        x = shd.act_residual(x + a @ p["attn"]["wo"].astype(x.dtype))
+        h2 = norm_apply(cfg, x, p["norm2"])
+        return shd.act_residual(x + _mlp(cfg, p["mlp"], h2)), None
+
+    x, _ = jax.lax.scan(body, x, enc["enc_layers"])
+    return norm_apply(cfg, x, enc["final_norm"])
+
+
+def apply(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+          remat: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Train/prefill forward. Returns (hidden (B,S,d), moe_aux scalar)."""
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = shd.act_tokens(batch["tokens"])
+    B, S = tokens.shape
+    x = _embed_tokens(cfg, params, tokens, dtype)
+
+    if cfg.vision_tokens and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(dtype)
+        x = jnp.concatenate([ve, x[:, ve.shape[1]:]], axis=1)
+
+    if "positions" in batch:
+        positions = batch["positions"]
+    elif cfg.mrope:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, 3, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    if cfg.learned_pos:
+        x = x + params["pos_embed"][:S].astype(dtype)[None]
+
+    enc_out = None
+    if cfg.encoder_decoder:
+        enc_out = encode(cfg, params, batch["frames"])
+
+    x = shd.act_residual(x)
+    is_global = _is_global_arr(cfg, cfg.num_layers)
+
+    def body(x, scanned):
+        p, glob = scanned
+        x, aux, _ = _layer_train(cfg, p, x, positions, glob, enc_out)
+        return x, aux
+
+    if remat:
+        body = jax.checkpoint(body)
+    # cast layer weights to the compute dtype BEFORE the scan, so the FSDP
+    # all-gathers inside the loop move bf16, not fp32 master weights
+    layers = _cast_layers(params["layers"], dtype)
+    x, auxs = jax.lax.scan(body, x, (layers, is_global))
+    x = norm_apply(cfg, x, params["final_norm"])
+    return x, jnp.sum(auxs)
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]):
+    """Inference prefill: forward pass that also materializes the cache.
+
+    Returns (last-position logits (B, V), cache pytree with leading L axes).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    tokens = shd.act_tokens(batch["tokens"])
+    B, S = tokens.shape
+    x = _embed_tokens(cfg, params, tokens, dtype)
+    if cfg.vision_tokens and "vision_embeds" in batch:
+        ve = batch["vision_embeds"].astype(dtype)
+        x = jnp.concatenate([ve, x[:, ve.shape[1]:]], axis=1)
+    if "positions" in batch:
+        positions = batch["positions"]
+    elif cfg.mrope:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, 3, S))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if cfg.learned_pos:
+        x = x + params["pos_embed"][:S].astype(dtype)[None]
+    enc_out = encode(cfg, params, batch["frames"]) if cfg.encoder_decoder \
+        else None
+    x = shd.act_residual(x)
+    is_global = _is_global_arr(cfg, cfg.num_layers)
+
+    def body(x, scanned):
+        p, glob = scanned
+        x, _, extras = _layer_train(cfg, p, x, positions, glob, enc_out,
+                                    collect=True)
+        return x, extras
+
+    x, cache = jax.lax.scan(body, x, (params["layers"], is_global))
+    x = norm_apply(cfg, x, params["final_norm"])
+    logits = unembed(cfg, params, x[:, -1:])
+    if cfg.encoder_decoder:
+        zero = init_cache(cfg, B, S, dtype)
+        cache["ck"], cache["cv"] = zero["ck"], zero["cv"]
+        cache = prefill_cross(cfg, params, batch["frames"], cache)
+    return logits, cache
+
+
+def unembed(cfg: ModelConfig, params: Params, hidden) -> jax.Array:
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = hidden @ head.astype(hidden.dtype)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init + decode step
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch_size: int, seq_len: int,
+               dtype=jnp.bfloat16) -> Params:
+    L, B, S = cfg.num_layers, batch_size, seq_len
+    KH, hd = cfg.num_kv_heads, cfg.head_dim
+    cache: Params = {}
+    if cfg.rwkv:
+        cache["s"] = jnp.zeros((L, B, cfg.num_heads, hd, hd), jnp.float32)
+        cache["shift_t"] = jnp.zeros((L, B, 1, cfg.d_model), dtype)
+        cache["shift_c"] = jnp.zeros((L, B, 1, cfg.d_model), dtype)
+        return cache
+    cache["k"] = jnp.zeros((L, B, S, KH, hd), dtype)
+    cache["v"] = jnp.zeros((L, B, S, KH, hd), dtype)
+    if cfg.hybrid:
+        cache["h"] = jnp.zeros((L, B, cfg.d_model, cfg.ssm_state),
+                               jnp.float32)
+        cache["conv"] = jnp.zeros((L, B, ssm.CONV_W - 1, cfg.d_model), dtype)
+    if cfg.encoder_decoder:
+        cache["ck"] = jnp.zeros((L, B, cfg.encoder_seq, KH, hd), dtype)
+        cache["cv"] = jnp.zeros((L, B, cfg.encoder_seq, KH, hd), dtype)
+    return cache
+
+
+def prefill_cross(cfg: ModelConfig, params: Params, frames, cache: Params):
+    """Whisper: run encoder once, fill per-layer cross K/V caches."""
+    enc_out = encode(cfg, params, frames)
+
+    def fill(cache_kv, p):
+        dt = enc_out.dtype
+        k = (enc_out @ p["cross"]["wk"].astype(dt)).reshape(
+            enc_out.shape[0], -1, cfg.num_kv_heads, cfg.head_dim)
+        v = (enc_out @ p["cross"]["wv"].astype(dt)).reshape(
+            enc_out.shape[0], -1, cfg.num_kv_heads, cfg.head_dim)
+        return k, v
+
+    ck, cv = jax.vmap(
+        lambda p: fill(None, p), in_axes=(0,))(params["layers"])
+    cache = dict(cache)
+    cache["ck"], cache["cv"] = ck.astype(cache["ck"].dtype), \
+        cv.astype(cache["cv"].dtype)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                tokens, pos, positions=None, embeds=None):
+    """One token for the whole batch. tokens: (B, 1); pos: scalar index.
+    `embeds` (B, 1, d) overrides the token embedding (modality frontends).
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    B = tokens.shape[0]
+    x = embeds.astype(dtype) if embeds is not None else \
+        _embed_tokens(cfg, params, tokens, dtype)
+    if cfg.learned_pos:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos, 1, 0).astype(dtype)[None, 0:1]
+    if positions is None:
+        shape = (B, 3, 1) if cfg.mrope else (B, 1)
+        positions = jnp.full(shape, pos)
+
+    is_global = _is_global_arr(cfg, cfg.num_layers)
+
+    def body(x, scanned):
+        p, c, glob = scanned
+        new_c = dict(c)
+        if cfg.rwkv:
+            st = {"shift": c["shift_t"], "s": c["s"]}
+            y, st2 = rwkv6.time_mix(norm_apply(cfg, x, p["norm1"]), p["time"],
+                                    cfg, state=st, chunked=False)
+            x = x + y
+            y, sc = rwkv6.channel_mix(norm_apply(cfg, x, p["norm2"]),
+                                      p["chan"], cfg, state=c["shift_c"])
+            x = x + y
+            new_c.update(s=st2["s"], shift_t=st2["shift"], shift_c=sc)
+            return x, new_c
+
+        h = norm_apply(cfg, x, p["norm1"])
+        q, k, v = _qkv(cfg, p["attn"], h)
+        if not cfg.learned_pos:
+            q = apply_rope(q, positions, cfg.rope_theta,
+                           cfg.mrope_sections if cfg.mrope else None)
+            k = apply_rope(k, positions, cfg.rope_theta,
+                           cfg.mrope_sections if cfg.mrope else None)
+        kc = jax.lax.dynamic_update_slice_in_dim(c["k"], k.astype(c["k"].dtype),
+                                                 pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(c["v"], v.astype(c["v"].dtype),
+                                                 pos, axis=1)
+        new_c.update(k=kc, v=vc)
+        a = decode_attention(q, kc, vc, pos, window=cfg.window,
+                             is_global=glob)
+        a = a.reshape(B, 1, cfg.q_dim)
+        if cfg.hybrid:
+            s_out, st2 = ssm.ssm_block(
+                h, p["ssm"], cfg, state={"conv": c["conv"], "h": c["h"]})
+            a = 0.5 * (rmsnorm(a, p["norm_attn_out"]["scale"], cfg.norm_eps)
+                       @ p["attn"]["wo"].astype(x.dtype)
+                       + rmsnorm(s_out, p["norm_ssm_out"]["scale"],
+                                 cfg.norm_eps))
+            new_c.update(h=st2["h"], conv=st2["conv"])
+        else:
+            a = a @ p["attn"]["wo"].astype(x.dtype)
+        x = x + a
+
+        if cfg.encoder_decoder:
+            hc = norm_apply(cfg, x, p["norm_cross"])
+            qc, _, _ = _qkv(cfg, p["cross"], hc)
+            ca = decode_attention(qc, c["ck"], c["cv"],
+                                  c["ck"].shape[1] - 1, is_global=True)
+            x = x + ca.reshape(B, 1, cfg.q_dim) @ p["cross"]["wo"].astype(
+                x.dtype)
+
+        h2 = norm_apply(cfg, x, p["norm2"])
+        ff, _ = _ffn(cfg, p, h2)
+        return x + ff, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache, is_global))
+    x = norm_apply(cfg, x, params["final_norm"])
+    return unembed(cfg, params, x), new_cache

@@ -1,0 +1,66 @@
+"""int8 gradient compression with error feedback (cross-pod all-reduce).
+
+Per-leaf blockwise symmetric quantization: g ~ scale * int8. The residual
+(g - dequant) is carried in an error-feedback buffer and added to the next
+step's gradient, so compression error does not bias convergence (EF-SGD).
+Intended for the slow cross-pod axis; intra-pod reductions stay full
+precision.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quant_leaf(g):
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_leaf(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def init_error_feedback(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_decompress(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """Returns (dequantized grads as would arrive post-all-reduce, new error
+    buffers). Quantization is simulated end-to-end so tests measure exact
+    round-trip error; on hardware the int8 payload is what crosses the pod
+    link (4x reduction vs f32)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, scale = _quant_leaf(g32)
+        deq = _dequant_leaf(q, scale, g.shape)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+            jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]))
+
+
+def compressed_bytes(grads: Any) -> int:
+    """Payload model: int8 + one f32 scale per BLOCK."""
+    tot = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        tot += n + 4 * ((n + BLOCK - 1) // BLOCK)
+    return tot

@@ -1,0 +1,212 @@
+"""Prior-work baselines for the paper's §6.3 comparison table and the §2
+full-batch-vs-mini-batch motivation:
+
+  - ClusterGCN [14]: batches = random unions of graph partitions
+    (communities here, as the partitioner); the subgraph is the FULL induced
+    subgraph, computed for ALL its nodes — per-epoch cost is invariant to the
+    training-set size (paper Fig 8).
+  - LABOR-lite [9]: structure-agnostic variance-reduced neighbor sampling —
+    neighbors are chosen by shared per-node hash randomness so overlapping
+    neighborhoods pick the SAME neighbors, shrinking the unique footprint
+    without community info.
+  - full-batch: one gradient step per epoch on the whole graph.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GNNConfig, TrainConfig
+from repro.core import minibatch as mb
+from repro.graphs.csr import Graph
+from repro.models.gnn.fullgraph import SubgraphBatch, sage_subgraph_apply
+from repro.models.gnn.models import init_gnn
+from repro.optim import adamw
+from repro.train.losses import accuracy, gnn_softmax_ce
+
+
+# ---------------------------------------------------------------------------
+# ClusterGCN
+# ---------------------------------------------------------------------------
+def clustergcn_batches(graph: Graph, parts_per_batch: int,
+                       rng: np.random.Generator) -> List[np.ndarray]:
+    """Random unions of `parts_per_batch` communities (one epoch)."""
+    n_comm = graph.communities.max() + 1
+    order = rng.permutation(n_comm)
+    groups = np.split(order, range(parts_per_batch, n_comm, parts_per_batch))
+    members = [np.where(np.isin(graph.communities, g))[0] for g in groups]
+    return members
+
+
+def induced_subgraph(graph: Graph, nodes: np.ndarray, cap_n: int,
+                     cap_e: int) -> SubgraphBatch:
+    pos = np.full(graph.num_nodes, -1, np.int64)
+    nodes = nodes[:cap_n]
+    pos[nodes] = np.arange(len(nodes))
+    srcs, dsts = [], []
+    for i, u in enumerate(nodes):
+        nbr = graph.indices[graph.indptr[u]:graph.indptr[u + 1]]
+        p = pos[nbr]
+        ok = p >= 0
+        srcs.append(p[ok])
+        dsts.append(np.full(ok.sum(), i))
+    es = np.concatenate(srcs)[:cap_e] if srcs else np.zeros(0, np.int64)
+    ed = np.concatenate(dsts)[:cap_e] if dsts else np.zeros(0, np.int64)
+    n_pad, e_pad = cap_n - len(nodes), cap_e - len(es)
+    train_set = np.zeros(graph.num_nodes, bool)
+    train_set[graph.train_ids] = True
+    return SubgraphBatch(
+        nodes=jnp.asarray(np.pad(nodes, (0, n_pad),
+                                 constant_values=graph.num_nodes), jnp.int32),
+        node_mask=jnp.asarray(np.pad(np.ones(len(nodes), bool),
+                                     (0, n_pad))),
+        edge_src=jnp.asarray(np.pad(es, (0, e_pad)), jnp.int32),
+        edge_dst=jnp.asarray(np.pad(ed, (0, e_pad)), jnp.int32),
+        edge_mask=jnp.asarray(np.pad(np.ones(len(es), bool), (0, e_pad))),
+        labels=jnp.asarray(np.pad(graph.labels[nodes], (0, n_pad)),
+                           jnp.int32),
+        loss_mask=jnp.asarray(np.pad(train_set[nodes], (0, n_pad))),
+    )
+
+
+def train_clustergcn(graph: Graph, cfg: GNNConfig, tcfg: TrainConfig,
+                     parts_per_batch: int = 2, seed: int = 0,
+                     epochs: int = None):
+    """Returns dict with per-epoch time / val acc (paper Table 4 / Fig 8)."""
+    rng = np.random.default_rng(seed)
+    params = init_gnn(cfg, jax.random.key(seed))
+    opt = adamw.init(params)
+    feats = jnp.asarray(graph.features)
+    # static caps from the largest community union
+    sizes = np.bincount(graph.communities)
+    cap_n = int(np.sort(sizes)[-parts_per_batch:].sum() * 1.3) + 64
+    deg = graph.degrees()
+    cap_e = int(cap_n * max(deg.mean() * 2, 8))
+
+    @jax.jit
+    def step(params, opt, batch: SubgraphBatch, key):
+        def loss_fn(p):
+            x = feats[jnp.minimum(batch.nodes, feats.shape[0] - 1)]
+            logits = sage_subgraph_apply(cfg, p, batch, x, train=True,
+                                         dropout_key=key)
+            return gnn_softmax_ce(logits, batch.labels,
+                                  batch.loss_mask.astype(jnp.float32))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adamw.update(grads, opt, params,
+                                   lr=tcfg.learning_rate,
+                                   weight_decay=tcfg.weight_decay)
+        return params, opt, loss
+
+    @jax.jit
+    def eval_step(params, batch: SubgraphBatch, mask):
+        x = feats[jnp.minimum(batch.nodes, feats.shape[0] - 1)]
+        logits = sage_subgraph_apply(cfg, params, batch, x)
+        return accuracy(logits, batch.labels, mask)
+
+    key = jax.random.key(seed)
+    times, losses = [], []
+    n_ep = epochs or tcfg.max_epochs
+    for ep in range(n_ep):
+        t0 = time.perf_counter()
+        for part in clustergcn_batches(graph, parts_per_batch, rng):
+            batch = induced_subgraph(graph, part, cap_n, cap_e)
+            key, k = jax.random.split(key)
+            params, opt, loss = step(params, opt, batch, k)
+        jax.block_until_ready(loss)
+        times.append(time.perf_counter() - t0)
+        losses.append(float(loss))
+    # validation on induced full graph in community chunks
+    val_set = np.zeros(graph.num_nodes, bool)
+    val_set[graph.val_ids] = True
+    accs, ns = [], []
+    for part in clustergcn_batches(graph, parts_per_batch, rng):
+        batch = induced_subgraph(graph, part, cap_n, cap_e)
+        vm = val_set[np.asarray(batch.nodes.clip(0, graph.num_nodes - 1))]
+        vm &= np.asarray(batch.node_mask)
+        if vm.sum() == 0:
+            continue
+        accs.append(float(eval_step(params, batch,
+                                    jnp.asarray(vm, jnp.float32))))
+        ns.append(vm.sum())
+    val = float(np.average(accs, weights=ns)) if accs else 0.0
+    return {"per_epoch_time_s": float(np.mean(times)), "val_acc": val,
+            "loss": losses[-1]}
+
+
+# ---------------------------------------------------------------------------
+# full-batch baseline (paper §2)
+# ---------------------------------------------------------------------------
+def train_fullbatch(graph: Graph, cfg: GNNConfig, tcfg: TrainConfig,
+                    seed: int = 0, epochs: int = None):
+    cap_n = graph.num_nodes + 1
+    cap_e = graph.num_edges + 1
+    batch = induced_subgraph(graph, np.arange(graph.num_nodes), cap_n, cap_e)
+    params = init_gnn(cfg, jax.random.key(seed))
+    opt = adamw.init(params)
+    feats = jnp.asarray(graph.features)
+    val_set = np.zeros(graph.num_nodes, bool)
+    val_set[graph.val_ids] = True
+    val_mask = jnp.asarray(np.pad(val_set, (0, 1)), jnp.float32)
+
+    @jax.jit
+    def step(params, opt, key):
+        def loss_fn(p):
+            x = feats[jnp.minimum(batch.nodes, feats.shape[0] - 1)]
+            logits = sage_subgraph_apply(cfg, p, batch, x, train=True,
+                                         dropout_key=key)
+            return gnn_softmax_ce(logits, batch.labels,
+                                  batch.loss_mask.astype(jnp.float32))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adamw.update(grads, opt, params,
+                                   lr=tcfg.learning_rate,
+                                   weight_decay=tcfg.weight_decay)
+        return params, opt, loss
+
+    @jax.jit
+    def val_acc(params):
+        x = feats[jnp.minimum(batch.nodes, feats.shape[0] - 1)]
+        logits = sage_subgraph_apply(cfg, params, batch, x)
+        return accuracy(logits, batch.labels, val_mask)
+
+    key = jax.random.key(seed)
+    times, accs = [], []
+    for ep in range(epochs or tcfg.max_epochs):
+        t0 = time.perf_counter()
+        key, k = jax.random.split(key)
+        params, opt, loss = step(params, opt, k)
+        jax.block_until_ready(loss)
+        times.append(time.perf_counter() - t0)
+        accs.append(float(val_acc(params)))
+    return {"per_epoch_time_s": float(np.mean(times)),
+            "val_acc_curve": accs, "val_acc": accs[-1]}
+
+
+# ---------------------------------------------------------------------------
+# LABOR-lite: shared-randomness neighbor sampling (structure-agnostic)
+# ---------------------------------------------------------------------------
+def labor_lite_epoch_footprint(graph: Graph, batches: np.ndarray,
+                               fanouts, seed: int = 0):
+    """Unique-footprint comparison: neighbors picked by the globally-shared
+    per-node hash ranks (LABOR's dependent sampling), no community info.
+    Returns mean unique input nodes per batch."""
+    rng = np.random.default_rng(seed)
+    rank = rng.random(graph.num_nodes)        # shared randomness
+    sizes = []
+    for b in batches:
+        level = np.unique(b[b >= 0])
+        for r in fanouts:
+            nxt = [level]
+            for u in level:
+                nbr = graph.indices[graph.indptr[u]:graph.indptr[u + 1]]
+                if len(nbr) == 0:
+                    continue
+                if len(nbr) > r:
+                    nbr = nbr[np.argpartition(rank[nbr], r)[:r]]
+                nxt.append(nbr)
+            level = np.unique(np.concatenate(nxt))
+        sizes.append(len(level))
+    return float(np.mean(sizes))

@@ -1,0 +1,220 @@
+"""GNN mini-batch training loop — mirrors the paper's methodology (§5):
+AdamW(lr=1e-3, wd=5e-4), batch 1024, fanout 10 per hop, up to 100 epochs,
+early stopping on val loss (patience 6), ReduceLROnPlateau (patience 3),
+metrics: final val acc, per-epoch time, epochs-to-converge, total time, and
+the Fig-6 working-set metric (mean unique input nodes / feature bytes).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CommRandPolicy, GNNConfig, TrainConfig
+from repro.core import minibatch as mb
+from repro.core import partition
+from repro.graphs.csr import DeviceGraph, Graph
+from repro.models.gnn.models import apply_gnn, init_gnn
+from repro.optim import adamw
+from repro.optim.schedule import EarlyStopping, ReduceLROnPlateau
+from repro.train.losses import accuracy, gnn_softmax_ce
+
+
+@dataclass
+class EpochMetrics:
+    epoch: int
+    train_loss: float
+    val_loss: float
+    val_acc: float
+    epoch_time_s: float
+    mean_unique_nodes: float
+
+
+@dataclass
+class TrainResult:
+    policy: str
+    val_acc: float                  # at best epoch
+    test_acc: float
+    epochs_to_converge: int
+    per_epoch_time_s: float
+    total_time_s: float
+    mean_unique_nodes: float
+    feature_bytes_per_batch: float
+    caps: tuple
+    history: List[EpochMetrics] = field(default_factory=list)
+
+
+def _make_steps(cfg: GNNConfig, tcfg: TrainConfig, caps, fanouts):
+    @functools.partial(jax.jit, static_argnames=())
+    def train_step(params, opt_state, batch: mb.MiniBatch, feats, degrees,
+                   lr, key):
+        def loss_fn(p):
+            x = feats[jnp.minimum(batch.node_ids, feats.shape[0] - 1)]
+            logits = apply_gnn(cfg, p, batch, x, degrees, train=True,
+                               dropout_key=key)
+            return gnn_softmax_ce(logits, batch.labels,
+                                  batch.label_mask.astype(jnp.float32))
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_opt = adamw.update(
+            grads, opt_state, params, lr=lr,
+            weight_decay=tcfg.weight_decay)
+        return new_params, new_opt, loss
+
+    @jax.jit
+    def eval_step(params, batch: mb.MiniBatch, feats, degrees):
+        x = feats[jnp.minimum(batch.node_ids, feats.shape[0] - 1)]
+        logits = apply_gnn(cfg, params, batch, x, degrees, train=False)
+        m = batch.label_mask.astype(jnp.float32)
+        return (gnn_softmax_ce(logits, batch.labels, m),
+                accuracy(logits, batch.labels, m), m.sum())
+
+    return train_step, eval_step
+
+
+class GNNTrainer:
+    """One (graph, model, policy) training run."""
+
+    def __init__(self, graph: Graph, cfg: GNNConfig, tcfg: TrainConfig,
+                 policy: CommRandPolicy, caps=None, eval_caps=None,
+                 seed: int = 0):
+        self.graph = graph
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.policy = policy
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.key(seed)
+        self.g = DeviceGraph.from_graph(graph)
+        self.feats = jnp.asarray(graph.features)
+        self.labels = jnp.asarray(graph.labels)
+        self.degrees = self.g.degrees
+        self.fanouts = tuple(cfg.fanout[:cfg.num_layers])
+        self.caps = caps or mb.calibrate_caps(
+            graph, policy, tcfg.batch_size, self.fanouts, seed=seed)
+        # eval always uses the uniform policy (identical across compared
+        # policies) — calibrate once with p=0.5
+        self.eval_policy = CommRandPolicy("rand", 0.0, 0.5)
+        self.eval_caps = eval_caps or mb.calibrate_caps(
+            graph, self.eval_policy, tcfg.batch_size, self.fanouts,
+            seed=seed + 1)
+        self.train_step, self.eval_step = _make_steps(
+            cfg, tcfg, self.caps, self.fanouts)
+        self.params = init_gnn(cfg, jax.random.key(seed))
+        self.opt_state = adamw.init(self.params)
+
+    def _build(self, roots_np, caps, p):
+        self.key, k = jax.random.split(self.key)
+        roots = jnp.asarray(roots_np, jnp.int32)
+        return mb.build_batch(k, self.g, roots, self.labels, self.fanouts,
+                              caps, p)
+
+    def warmup(self):
+        """Trigger all jit compilations without disturbing training state
+        (so per-epoch timings measure steady-state throughput)."""
+        saved = (jax.tree.map(lambda x: x, self.params),
+                 jax.tree.map(lambda x: x, self.opt_state))
+        roots = np.full(self.tcfg.batch_size, -1, np.int64)
+        roots[:min(len(self.graph.train_ids), 8)] = \
+            self.graph.train_ids[:8]
+        b = self._build(roots, self.caps, self.policy.p)
+        self.params, self.opt_state, _ = self.train_step(
+            self.params, self.opt_state, b, self.feats, self.degrees,
+            0.0, jax.random.key(0))
+        be = self._build(roots, self.eval_caps, self.eval_policy.p)
+        self.eval_step(self.params, be, self.feats, self.degrees)
+        self.params, self.opt_state = saved
+        return self
+
+    def run_epoch(self, lr: float) -> Dict:
+        t0 = time.perf_counter()
+        batches = partition.batches_for_epoch(
+            self.graph.train_ids, self.graph.communities, self.policy,
+            self.tcfg.batch_size, self.rng)
+        losses, uniq = [], []
+        for b in batches:
+            batch = self._build(b, self.caps, self.policy.p)
+            self.key, k = jax.random.split(self.key)
+            self.params, self.opt_state, loss = self.train_step(
+                self.params, self.opt_state, batch, self.feats,
+                self.degrees, lr, k)
+            losses.append(loss)
+            uniq.append(batch.num_unique)
+        jax.block_until_ready(losses[-1])
+        dt = time.perf_counter() - t0
+        return {"loss": float(np.mean([float(l) for l in losses])),
+                "time": dt,
+                "uniq": float(np.mean([float(u) for u in uniq]))}
+
+    def evaluate(self, ids: np.ndarray) -> Dict:
+        tot_l, tot_a, tot_n = 0.0, 0.0, 0.0
+        for i in range(0, len(ids), self.tcfg.batch_size):
+            chunk = ids[i:i + self.tcfg.batch_size]
+            pad = np.full(self.tcfg.batch_size, -1, np.int64)
+            pad[:len(chunk)] = chunk
+            batch = self._build(pad, self.eval_caps, self.eval_policy.p)
+            l, a, n = self.eval_step(self.params, batch, self.feats,
+                                     self.degrees)
+            n = float(n)
+            tot_l += float(l) * n
+            tot_a += float(a) * n
+            tot_n += n
+        return {"loss": tot_l / max(tot_n, 1), "acc": tot_a / max(tot_n, 1)}
+
+    def fit(self, verbose: bool = False) -> TrainResult:
+        stopper = EarlyStopping(self.tcfg.early_stop_patience)
+        plateau = ReduceLROnPlateau(self.tcfg.learning_rate,
+                                    self.tcfg.plateau_factor,
+                                    self.tcfg.plateau_patience)
+        history: List[EpochMetrics] = []
+        best_val_acc, best_params = 0.0, self.params
+        lr = self.tcfg.learning_rate
+        t_start = time.perf_counter()
+        for epoch in range(self.tcfg.max_epochs):
+            em = self.run_epoch(lr)
+            ev = self.evaluate(self.graph.val_ids)
+            history.append(EpochMetrics(epoch, em["loss"], ev["loss"],
+                                        ev["acc"], em["time"], em["uniq"]))
+            if verbose:
+                print(f"  epoch {epoch:3d} loss={em['loss']:.4f} "
+                      f"val={ev['acc']:.4f} t={em['time']:.2f}s "
+                      f"uniq={em['uniq']:.0f}")
+            if ev["acc"] > best_val_acc:
+                best_val_acc = ev["acc"]
+                best_params = jax.tree.map(lambda x: x, self.params)
+            lr = plateau.step(ev["loss"])
+            if stopper.update(ev["loss"], epoch):
+                break
+        total = time.perf_counter() - t_start
+        self.params = best_params
+        test = self.evaluate(self.graph.test_ids)
+        n_epochs = len(history)
+        return TrainResult(
+            policy=self.policy.describe(),
+            val_acc=best_val_acc,
+            test_acc=test["acc"],
+            epochs_to_converge=stopper.best_epoch + 1
+            if stopper.best_epoch >= 0 else n_epochs,
+            per_epoch_time_s=float(np.mean([h.epoch_time_s
+                                            for h in history])),
+            total_time_s=total,
+            mean_unique_nodes=float(np.mean([h.mean_unique_nodes
+                                             for h in history])),
+            feature_bytes_per_batch=float(np.mean(
+                [h.mean_unique_nodes for h in history]))
+            * self.graph.feat_dim * 4,
+            caps=self.caps,
+            history=history,
+        )
+
+
+def train_once(graph: Graph, cfg: GNNConfig, policy: CommRandPolicy,
+               tcfg: Optional[TrainConfig] = None, seed: int = 0,
+               verbose: bool = False) -> TrainResult:
+    tcfg = tcfg or TrainConfig()
+    return GNNTrainer(graph, cfg, tcfg, policy,
+                      seed=seed).warmup().fit(verbose)

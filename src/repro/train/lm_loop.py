@@ -1,0 +1,136 @@
+"""Fault-tolerant LM training loop: checkpoint/resume, retry, straggler
+monitoring, optional int8 grad compression, elastic mesh restart.
+
+This is the driver `examples/train_lm.py` and the fault-tolerance tests use;
+the pod-scale variant differs only in the mesh passed to the step factory.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import Cursor, LMStream
+from repro.dist import sharding as shd
+from repro.models.lm import transformer
+from repro.optim import adamw
+from repro.optim.compression import (compress_decompress,
+                                     init_error_feedback)
+from repro.train import checkpoint as ckpt
+from repro.train.monitor import StragglerMonitor, resilient_step
+from repro.train.train_step import loss_fn as lm_loss_fn
+
+
+def make_ft_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+    """Like train_step but with optional error-feedback grad compression
+    (cross-pod all-reduce payload model)."""
+
+    def step(params, opt_state, err, batch, lr):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            lambda p: lm_loss_fn(cfg, p, batch, tcfg.remat),
+            has_aux=True)(params)
+        if tcfg.grad_compression:
+            grads, err = compress_decompress(grads, err)
+        grads, gnorm = adamw.clip_by_global_norm(grads, tcfg.grad_clip)
+        params, opt_state = adamw.update(grads, opt_state, params, lr=lr,
+                                         weight_decay=tcfg.weight_decay)
+        return params, opt_state, err, {"loss": loss, "ce": ce,
+                                        "grad_norm": gnorm}
+
+    if mesh is not None:
+        from repro.train.train_step import _with_mesh_ctx
+        step = _with_mesh_ctx(mesh, step)
+    return jax.jit(step, donate_argnums=(0, 1, 2))
+
+
+class LMTrainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, stream: LMStream,
+                 ckpt_dir: Optional[str] = None, mesh=None,
+                 ckpt_every: int = 50, seed: int = 0):
+        self.cfg, self.tcfg, self.stream = cfg, tcfg, stream
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.mesh = mesh
+        self.step_fn = make_ft_train_step(cfg, tcfg, mesh)
+        self.params = transformer.init(cfg, jax.random.key(seed))
+        self.opt = adamw.init(self.params)
+        self.err = init_error_feedback(self.params) \
+            if tcfg.grad_compression else jax.tree.map(
+                lambda x: jnp.zeros((1,)), {"_": jnp.zeros((1,))})
+        self.step = 0
+        self.monitor = StragglerMonitor()
+        self.history = []
+        if ckpt_dir:
+            self._try_resume()
+
+    # -- checkpoint/resume -------------------------------------------------
+    def _state(self):
+        return {"params": self.params, "opt": self.opt, "err": self.err}
+
+    def _try_resume(self):
+        like = self._state()
+        step, tree, extra = ckpt.restore_latest(self.ckpt_dir, like)
+        if step is None:
+            return
+        self.params, self.opt, self.err = (tree["params"], tree["opt"],
+                                           tree["err"])
+        self.step = step
+        self.stream.cursor = Cursor.from_state(extra["cursor"])
+
+    def save(self):
+        if not self.ckpt_dir:
+            return
+        ckpt.save(self.ckpt_dir, self.step, self._state(),
+                  extra={"cursor": self.stream.cursor.state()})
+
+    # -- run ---------------------------------------------------------------
+    def run(self, num_steps: int, lr: Optional[float] = None,
+            fail_hook=None) -> Dict:
+        lr = lr if lr is not None else self.tcfg.learning_rate
+        it = iter(self.stream)
+        losses = []
+        target = self.step + num_steps
+        while self.step < target:
+            toks, labels = next(it)
+            batch = {"tokens": jnp.asarray(toks),
+                     "labels": jnp.asarray(labels)}
+            t0 = time.perf_counter()
+
+            def do_step():
+                if fail_hook is not None:
+                    fail_hook(self.step)
+                return self.step_fn(self.params, self.opt, self.err, batch,
+                                    lr)
+
+            (self.params, self.opt, self.err, m), _ = resilient_step(
+                do_step, max_retries=2, on_give_up=self.save)
+            jax.block_until_ready(m["loss"])
+            self.monitor.observe(time.perf_counter() - t0, self.step)
+            losses.append(float(m["loss"]))
+            self.step += 1
+            if self.ckpt_dir and self.step % self.ckpt_every == 0:
+                self.save()
+        if self.ckpt_dir:
+            self.save()
+        self.history.extend(losses)
+        return {"loss_first": losses[0], "loss_last": losses[-1],
+                "losses": losses,
+                "straggler_fraction": self.monitor.straggler_fraction}
+
+
+def elastic_reshard(state, new_mesh):
+    """Re-layout a training state onto a different mesh (elastic restart):
+    compute fresh shardings for the new mesh and device_put every leaf."""
+    pspec = shd.param_shardings(state["params"], new_mesh)
+    return {
+        "params": jax.tree.map(jax.device_put, state["params"], pspec),
+        "opt": {
+            "m": jax.tree.map(jax.device_put, state["opt"]["m"], pspec),
+            "v": jax.tree.map(jax.device_put, state["opt"]["v"], pspec),
+            "count": jax.device_put(state["opt"]["count"]),
+        },
+    }

@@ -1,0 +1,61 @@
+"""Losses. The LM loss is a sequence-chunked, rematerialized softmax
+cross-entropy: the (B, S, V) logits tensor never materializes (V up to 262k
+makes it the dominant activation otherwise).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import sharding as shd
+
+
+def _ce_chunk(hidden, head, labels, mask):
+    """hidden (B,C,d) fp32-castable; head (d,V); labels (B,C)."""
+    hidden = shd.act_ce_hidden(hidden)
+    logits = shd.act_logits(hidden @ head).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - picked) * mask
+    return nll.sum(), mask.sum()
+
+
+def chunked_cross_entropy(hidden, head, labels, mask=None, chunk=512):
+    """Mean next-token NLL, scanning the sequence in `chunk` slices with
+    rematerialization (logits recomputed in backward)."""
+    B, S, d = hidden.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    if S % chunk != 0:
+        chunk = S
+    n = S // chunk
+
+    hc = jnp.moveaxis(hidden.reshape(B, n, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        tot, cnt = carry
+        h, l, m = inp
+        s, c = _ce_chunk(h, head, l, m)
+        return (tot + s, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def gnn_softmax_ce(logits, labels, mask):
+    """Node-classification CE over root nodes. logits (N, C)."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    picked = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[:, None], axis=-1)[:, 0]
+    nll = (lse - picked) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def accuracy(logits, labels, mask):
+    pred = jnp.argmax(logits, axis=-1)
+    correct = (pred == labels).astype(jnp.float32) * mask
+    return correct.sum() / jnp.maximum(mask.sum(), 1.0)

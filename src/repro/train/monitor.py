@@ -1,0 +1,67 @@
+"""Runtime health: straggler detection + retry-with-backoff step execution.
+
+At pod scale the common failure modes are (a) a slow host (data pipeline or
+thermal throttling) and (b) transient device errors. The monitor keeps an
+EMA of step time and flags outliers; `resilient_step` retries a step
+function and escalates to a checkpoint-restore callback after repeated
+failures (tested by fault injection in tests/test_fault_tolerance.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional
+
+
+@dataclass
+class StragglerMonitor:
+    """EMA step-time tracker. `threshold` x EMA flags a straggler step."""
+    alpha: float = 0.1
+    threshold: float = 2.0
+    warmup: int = 3
+    ema: float = 0.0
+    count: int = 0
+    events: List[dict] = field(default_factory=list)
+
+    def observe(self, dt: float, step: int) -> bool:
+        self.count += 1
+        if self.count <= self.warmup:
+            self.ema = dt if self.ema == 0 else \
+                (self.alpha * dt + (1 - self.alpha) * self.ema)
+            return False
+        slow = dt > self.threshold * self.ema
+        if slow:
+            self.events.append({"step": step, "dt": dt, "ema": self.ema})
+        else:
+            self.ema = self.alpha * dt + (1 - self.alpha) * self.ema
+        return slow
+
+    @property
+    def straggler_fraction(self) -> float:
+        return len(self.events) / max(self.count - self.warmup, 1)
+
+
+class StepFailure(RuntimeError):
+    pass
+
+
+def resilient_step(fn: Callable, *args, max_retries: int = 2,
+                   backoff_s: float = 0.0,
+                   on_give_up: Optional[Callable] = None):
+    """Run `fn(*args)`; retry transient failures; escalate after retries.
+
+    Returns (result, attempts). `on_give_up` (e.g. restore-from-checkpoint
+    and rebuild step) is invoked before the final re-raise.
+    """
+    attempt = 0
+    while True:
+        try:
+            return fn(*args), attempt + 1
+        except Exception:  # noqa: BLE001 — deliberately broad: device loss
+            attempt += 1
+            if attempt > max_retries:
+                if on_give_up is not None:
+                    on_give_up()
+                raise
+            if backoff_s:
+                time.sleep(backoff_s * attempt)

@@ -1,0 +1,20 @@
+import jax
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see ONE device.
+# Multi-device tests spawn subprocesses with their own flags.
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def tiny_graph():
+    from repro.core.reorder import prepare
+    from repro.graphs import synthetic
+    return prepare(synthetic.load("tiny"), oracle=True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,50 @@
+"""Community detection + reordering."""
+import numpy as np
+
+from repro.core import community, reorder
+from repro.graphs import synthetic
+from repro.graphs.csr import intra_first_layout
+
+
+def test_louvain_recovers_sbm_structure():
+    g = synthetic.load("tiny")
+    comm = community.louvain(g.indptr, g.indices, seed=0)
+    q = community.modularity(g.indptr, g.indices, comm)
+    q_oracle = community.modularity(g.indptr, g.indices, g.communities)
+    assert q > 0.8 * q_oracle, (q, q_oracle)
+
+
+def test_modularity_of_random_assignment_is_low():
+    g = synthetic.load("tiny")
+    rng = np.random.default_rng(0)
+    rand = rng.integers(0, 8, g.num_nodes).astype(np.int32)
+    assert community.modularity(g.indptr, g.indices, rand) < 0.05
+
+
+def test_reorder_makes_communities_contiguous():
+    g = reorder.prepare(synthetic.load("tiny"), oracle=True)
+    comm = g.communities
+    # contiguous: community id changes at most n_comm-1 times
+    changes = np.sum(np.diff(comm) != 0)
+    assert changes == comm.max()
+
+
+def test_reorder_preserves_graph():
+    g = synthetic.load("tiny")
+    g2 = reorder.prepare(g, oracle=True)
+    assert g2.num_nodes == g.num_nodes
+    assert g2.num_edges == g.num_edges
+    assert np.array_equal(np.sort(g2.degrees()), np.sort(g.degrees()))
+    # labels follow their nodes: class histograms identical
+    assert np.array_equal(np.bincount(g2.labels), np.bincount(g.labels))
+
+
+def test_intra_first_layout_counts():
+    g = reorder.prepare(synthetic.load("tiny"), oracle=True)
+    for u in range(0, g.num_nodes, 97):
+        s, e = g.indptr[u], g.indptr[u + 1]
+        nbrs = g.indices[s:e]
+        intra = g.communities[nbrs] == g.communities[u]
+        ni = g.n_intra[u]
+        assert intra[:ni].all()
+        assert not intra[ni:].any()

@@ -1,0 +1,151 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU), with
+hypothesis shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.gather_mean.ops import gather_mean
+from repro.kernels.gather_mean.ref import gather_mean_ref
+from repro.kernels.moe_gmm.ops import moe_gmm
+from repro.kernels.moe_gmm.ref import moe_gmm_ref
+from repro.kernels.rwkv6_chunk.ops import wkv6_op
+from repro.kernels.rwkv6_chunk.ref import wkv6_ref
+from repro.models.lm.attention import attention_ref, flash_attention
+from repro.models.lm.rwkv6 import wkv6_chunked, wkv6_scan
+
+
+# ---------------------------------------------------------------------------
+# gather_mean
+# ---------------------------------------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(n=st.sampled_from([16, 50, 200]), d=st.sampled_from([8, 33]),
+       r=st.sampled_from([1, 4, 10]),
+       f=st.sampled_from([128, 256, 96]),
+       dense=st.booleans(), seed=st.integers(0, 20))
+def test_gather_mean_matches_ref(n, d, r, f, dense, seed):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    x = jax.random.normal(ks[0], (n, f), jnp.float32)
+    idx = jax.random.randint(ks[1], (d, r), 0, n)
+    mask = jnp.ones((d, r), bool) if dense else \
+        jax.random.bernoulli(ks[2], 0.7, (d, r))
+    np.testing.assert_allclose(
+        np.asarray(gather_mean(x, idx, mask)),
+        np.asarray(gather_mean_ref(x, idx, mask)), rtol=1e-5, atol=1e-5)
+
+
+def test_gather_mean_all_masked_row_is_zero():
+    x = jnp.ones((8, 128))
+    idx = jnp.zeros((2, 4), jnp.int32)
+    mask = jnp.zeros((2, 4), bool)
+    assert float(jnp.abs(gather_mean(x, idx, mask)).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# flash attention (kernel + custom-vjp jnp twin)
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(b=st.sampled_from([1, 2]), s=st.sampled_from([32, 64]),
+       h=st.sampled_from([2, 4]), g=st.sampled_from([1, 2]),
+       d=st.sampled_from([16, 32]),
+       causal=st.booleans(),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+       seed=st.integers(0, 20))
+def test_flash_kernel_matches_ref(b, s, h, g, d, causal, dtype, seed):
+    kh = h // g
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, h, d)).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kh, d)).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kh, d)).astype(dtype)
+    out = flash_attention_op(q, k, v, causal=causal, bq=32, bk=32)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_kernel_sliding_window():
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 16))
+    k = jax.random.normal(ks[1], (2, 64, 2, 16))
+    v = jax.random.normal(ks[2], (2, 64, 2, 16))
+    out = flash_attention_op(q, k, v, causal=True, window=16,
+                             is_global=False, bq=32, bk=32)
+    ref = attention_ref(q, k, v, causal=True, window=16, is_global=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_custom_vjp_grads_match_ref():
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 16))
+    k = jax.random.normal(ks[1], (2, 64, 2, 16))
+    v = jax.random.normal(ks[2], (2, 64, 2, 16))
+    f = lambda q, k, v: (flash_attention(q, k, v, chunk=16) ** 2).sum()
+    r = lambda q, k, v: (attention_ref(q, k, v) ** 2).sum()
+    gf = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(b=st.sampled_from([1, 2]), t=st.sampled_from([16, 64]),
+       h=st.sampled_from([1, 2]), n=st.sampled_from([8, 16]),
+       seed=st.integers(0, 20))
+def test_wkv6_kernel_matches_scan(b, t, h, n, seed):
+    ks = jax.random.split(jax.random.key(seed), 5)
+    r = jax.random.normal(ks[0], (b, t, h, n))
+    k = jax.random.normal(ks[1], (b, t, h, n))
+    v = jax.random.normal(ks[2], (b, t, h, n))
+    logw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (b, t, h, n)) * 0.5),
+                    -5.0, -1e-4)
+    u = jax.random.normal(ks[4], (h, n)) * 0.1
+    out = wkv6_op(r, k, v, logw, u)
+    ref = wkv6_ref(r, k, v, logw, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_wkv6_chunked_matches_scan_with_state():
+    ks = jax.random.split(jax.random.key(9), 5)
+    B, T, H, N = 2, 48, 2, 16
+    r = jax.random.normal(ks[0], (B, T, H, N))
+    k = jax.random.normal(ks[1], (B, T, H, N))
+    v = jax.random.normal(ks[2], (B, T, H, N))
+    logw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (B, T, H, N))),
+                    -5.0, -1e-4)
+    u = jax.random.normal(ks[4], (H, N)) * 0.1
+    s0 = jax.random.normal(jax.random.key(10), (B, H, N, N)) * 0.1
+    oc, sc = wkv6_chunked(r, k, v, logw, u, s0, chunk=16)
+    os_, ss = wkv6_scan(r, k, v, logw, u, s0)
+    np.testing.assert_allclose(np.asarray(oc), np.asarray(os_),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(ss),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# moe gmm
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(e=st.sampled_from([1, 4]), c=st.sampled_from([128, 256]),
+       d=st.sampled_from([128, 256]), f=st.sampled_from([128, 384]),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+       seed=st.integers(0, 10))
+def test_moe_gmm_matches_ref(e, c, d, f, dtype, seed):
+    ks = jax.random.split(jax.random.key(seed), 2)
+    x = jax.random.normal(ks[0], (e, c, d)).astype(dtype)
+    w = jax.random.normal(ks[1], (e, d, f)).astype(dtype)
+    out = moe_gmm(x, w)
+    ref = moe_gmm_ref(x, w)
+    tol = 2e-1 if dtype == jnp.bfloat16 else 1e-3
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)

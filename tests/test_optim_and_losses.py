@@ -1,0 +1,104 @@
+"""Optimizer, schedules, losses."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import adamw
+from repro.optim.schedule import EarlyStopping, ReduceLROnPlateau
+from repro.train.losses import chunked_cross_entropy, gnn_softmax_ce
+
+
+def _np_adamw(g, m, v, p, t, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.0):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mh = m / (1 - b1 ** t)
+    vh = v / (1 - b2 ** t)
+    return p - lr * (mh / (np.sqrt(vh) + eps) + wd * p), m, v
+
+
+def test_adamw_matches_numpy_reference():
+    rng = np.random.default_rng(0)
+    p0 = rng.normal(size=(7, 5)).astype(np.float32)
+    params = {"w": jnp.asarray(p0)}
+    state = adamw.init(params)
+    p_np, m_np, v_np = p0.copy(), np.zeros_like(p0), np.zeros_like(p0)
+    for t in range(1, 5):
+        g = rng.normal(size=p0.shape).astype(np.float32)
+        params, state = adamw.update({"w": jnp.asarray(g)}, state, params,
+                                     lr=1e-2, weight_decay=0.1)
+        p_np, m_np, v_np = _np_adamw(g, m_np, v_np, p_np, t, 1e-2, wd=0.1)
+        np.testing.assert_allclose(np.asarray(params["w"]), p_np, rtol=2e-5,
+                                   atol=2e-6)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0), "b": jnp.full((3,), -10.0)}
+    clipped, norm = adamw.clip_by_global_norm(g, 1.0)
+    assert abs(float(adamw.global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 20
+
+
+def test_reduce_lr_on_plateau_mirrors_paper_settings():
+    s = ReduceLROnPlateau(1e-3, factor=0.1, patience=3)
+    lr = 1e-3
+    for i in range(5):
+        lr = s.step(1.0)     # no improvement
+    assert abs(lr - 1e-4) < 1e-12
+    lr = s.step(0.5)         # improvement resets
+    assert abs(lr - 1e-4) < 1e-12
+
+
+def test_early_stopping_patience():
+    es = EarlyStopping(patience=3)
+    assert not es.update(1.0, 0)
+    assert not es.update(0.9, 1)
+    assert not es.update(0.95, 2)
+    assert not es.update(0.95, 3)
+    assert es.update(0.95, 4)
+    assert es.best_epoch == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.sampled_from([1, 3]), s=st.sampled_from([8, 32]),
+       v=st.sampled_from([64, 100]), chunk=st.sampled_from([8, 16, 32]),
+       seed=st.integers(0, 20))
+def test_chunked_ce_matches_direct(b, s, v, chunk, seed):
+    ks = jax.random.split(jax.random.key(seed), 3)
+    hidden = jax.random.normal(ks[0], (b, s, 16))
+    head = jax.random.normal(ks[1], (16, v))
+    labels = jax.random.randint(ks[2], (b, s), 0, v)
+    got = chunked_cross_entropy(hidden, head, labels, chunk=chunk)
+    logits = hidden @ head
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    want = (lse - picked).mean()
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+def test_chunked_ce_grads_match_direct():
+    ks = jax.random.split(jax.random.key(3), 3)
+    hidden = jax.random.normal(ks[0], (2, 16, 8))
+    head = jax.random.normal(ks[1], (8, 50))
+    labels = jax.random.randint(ks[2], (2, 16), 0, 50)
+
+    def direct(h, w):
+        logits = h @ w
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        return (lse - picked).mean()
+
+    g1 = jax.grad(lambda h, w: chunked_cross_entropy(h, w, labels, chunk=8),
+                  argnums=(0, 1))(hidden, head)
+    g2 = jax.grad(direct, argnums=(0, 1))(hidden, head)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-6)
+
+
+def test_gnn_ce_ignores_masked():
+    logits = jnp.asarray([[10.0, 0.0], [0.0, 10.0]])
+    labels = jnp.asarray([0, 0])
+    m_all = gnn_softmax_ce(logits, labels, jnp.asarray([1.0, 1.0]))
+    m_first = gnn_softmax_ce(logits, labels, jnp.asarray([1.0, 0.0]))
+    assert m_first < m_all

@@ -1,0 +1,90 @@
+"""Biased root partitioning: permutation + structure properties
+(paper §4.1 / Table 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import CommRandPolicy
+from repro.core import partition
+
+
+def _setup(n=500, n_comm=10, seed=0):
+    rng = np.random.default_rng(seed)
+    train_ids = np.sort(rng.choice(2000, n, replace=False))
+    communities = rng.integers(0, n_comm, 2000).astype(np.int32)
+    return train_ids, communities, rng
+
+
+@settings(max_examples=15, deadline=None)
+@given(mode=st.sampled_from(["rand", "norand", "comm_rand"]),
+       mix=st.sampled_from([0.0, 0.125, 0.25, 0.5]),
+       seed=st.integers(0, 100))
+def test_epoch_order_is_permutation(mode, mix, seed):
+    train_ids, communities, _ = _setup(seed=seed % 7)
+    pol = CommRandPolicy(mode, mix, 1.0)
+    rng = np.random.default_rng(seed)
+    order = partition.epoch_order(train_ids, communities, pol, rng)
+    assert np.array_equal(np.sort(order), np.sort(train_ids))
+
+
+def test_norand_is_static_and_community_sorted():
+    train_ids, communities, rng = _setup()
+    pol = CommRandPolicy("norand")
+    o1 = partition.epoch_order(train_ids, communities, pol, rng)
+    o2 = partition.epoch_order(train_ids, communities, pol, rng)
+    assert np.array_equal(o1, o2)
+    comm_seq = communities[o1]
+    assert np.sum(np.diff(comm_seq) != 0) == len(np.unique(comm_seq)) - 1
+
+
+def test_rand_differs_across_epochs():
+    train_ids, communities, rng = _setup()
+    pol = CommRandPolicy("rand")
+    o1 = partition.epoch_order(train_ids, communities, pol, rng)
+    o2 = partition.epoch_order(train_ids, communities, pol, rng)
+    assert not np.array_equal(o1, o2)
+
+
+def test_comm_rand_mix0_keeps_community_blocks():
+    """MIX-0%: each community stays contiguous, contents shuffled."""
+    train_ids, communities, rng = _setup()
+    pol = CommRandPolicy("comm_rand", 0.0, 1.0)
+    o = partition.epoch_order(train_ids, communities, pol, rng)
+    comm_seq = communities[o]
+    assert np.sum(np.diff(comm_seq) != 0) == len(np.unique(comm_seq)) - 1
+    o2 = partition.epoch_order(train_ids, communities, pol, rng)
+    assert not np.array_equal(o, o2)   # randomized within blocks
+
+
+def test_mixing_increases_batch_community_diversity():
+    """Paper Fig 3: more mixing -> more communities per batch."""
+    train_ids, communities, rng = _setup(n=1000, n_comm=20)
+    div = {}
+    for mix in (0.0, 0.25, 0.5):
+        pol = CommRandPolicy("comm_rand", mix, 1.0)
+        batches = partition.batches_for_epoch(train_ids, communities, pol,
+                                              64, np.random.default_rng(1))
+        div[mix] = partition.communities_per_batch(batches, communities)
+    rand_batches = partition.batches_for_epoch(
+        train_ids, communities, CommRandPolicy("rand"), 64,
+        np.random.default_rng(1))
+    div["rand"] = partition.communities_per_batch(rand_batches, communities)
+    assert div[0.0] <= div[0.25] <= div[0.5] <= div["rand"] + 1e-9
+
+
+def test_make_batches_pads_last():
+    out = partition.make_batches(np.arange(10), 4)
+    assert out.shape == (3, 4)
+    assert (out[-1][2:] == -1).all()
+
+
+def test_label_diversity_metric_decreases_with_bias(tiny_graph):
+    """Paper Fig 7 direction: NORAND has fewer labels/batch than RAND."""
+    g = tiny_graph
+    rng = np.random.default_rng(0)
+    b_rand = partition.batches_for_epoch(
+        g.train_ids, g.communities, CommRandPolicy("rand"), 128, rng)
+    b_nor = partition.batches_for_epoch(
+        g.train_ids, g.communities, CommRandPolicy("norand"), 128, rng)
+    assert partition.labels_per_batch(b_nor, g.labels) <= \
+        partition.labels_per_batch(b_rand, g.labels)

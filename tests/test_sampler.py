@@ -1,0 +1,86 @@
+"""Biased neighborhood sampling (paper §4.2): probability + validity
+properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sampler import sample_neighbors
+from repro.graphs.csr import DeviceGraph
+
+
+@pytest.fixture(scope="module")
+def gdev(tiny_graph):
+    return DeviceGraph.from_graph(tiny_graph)
+
+
+def test_sampled_edges_exist(gdev, tiny_graph):
+    nodes = jnp.asarray(tiny_graph.train_ids[:64], jnp.int32)
+    srcs, mask = sample_neighbors(jax.random.key(0), gdev, nodes, 10, 0.5)
+    srcs, mask = np.asarray(srcs), np.asarray(mask)
+    g = tiny_graph
+    for i, u in enumerate(np.asarray(nodes)):
+        nbrs = set(g.indices[g.indptr[u]:g.indptr[u + 1]])
+        for j in range(10):
+            if mask[i, j]:
+                assert int(srcs[i, j]) in nbrs or int(srcs[i, j]) == u
+
+
+def test_p1_selects_only_intra(gdev, tiny_graph):
+    g = tiny_graph
+    # nodes that have at least one intra neighbor
+    cand = np.where(g.n_intra > 0)[0][:128]
+    nodes = jnp.asarray(cand, jnp.int32)
+    srcs, mask = sample_neighbors(jax.random.key(1), gdev, nodes, 10, 1.0)
+    srcs, mask = np.asarray(srcs), np.asarray(mask)
+    comm = g.communities
+    same = comm[srcs] == comm[np.asarray(nodes)][:, None]
+    assert same[mask].all()
+
+
+def test_p05_is_unbiased(gdev, tiny_graph):
+    """p=0.5 must be (near) uniform over neighbors: intra fraction of
+    samples ~ intra fraction of edges."""
+    g = tiny_graph
+    cand = np.where((g.n_intra > 2) & (g.degrees() - g.n_intra > 2))[0][:64]
+    nodes = jnp.asarray(np.repeat(cand, 8), jnp.int32)
+    srcs, mask = sample_neighbors(jax.random.key(2), gdev, nodes, 16, 0.5)
+    srcs = np.asarray(srcs)
+    nodes_np = np.asarray(nodes)
+    same = (g.communities[srcs] == g.communities[nodes_np][:, None]).mean()
+    exp = (g.n_intra[cand] / g.degrees()[cand]).mean()
+    assert abs(same - exp) < 0.05, (same, exp)
+
+
+def test_sentinel_and_isolated(gdev, tiny_graph):
+    N = tiny_graph.num_nodes
+    nodes = jnp.asarray([N, N, 5], jnp.int32)   # two padded + one real
+    srcs, mask = sample_neighbors(jax.random.key(3), gdev, nodes, 4, 0.9)
+    assert (np.asarray(srcs[:2]) == N).all()
+    assert not np.asarray(mask[:2]).any()
+
+
+def test_mode_all_enumerates_neighbors(gdev, tiny_graph):
+    g = tiny_graph
+    u = int(g.train_ids[0])
+    deg = int(g.degrees()[u])
+    fan = deg + 4
+    srcs, mask = sample_neighbors(jax.random.key(4), gdev,
+                                  jnp.asarray([u], jnp.int32), fan, 0.5,
+                                  mode="all")
+    got = set(np.asarray(srcs)[0][np.asarray(mask)[0]].tolist())
+    want = set(g.indices[g.indptr[u]:g.indptr[u + 1]].tolist())
+    assert got == want
+    assert int(np.asarray(mask).sum()) == deg
+
+
+@settings(max_examples=10, deadline=None)
+@given(p=st.floats(0.5, 1.0), seed=st.integers(0, 50), fanout=st.sampled_from([1, 5, 13]))
+def test_shapes_and_determinism(gdev, p, seed, fanout):
+    nodes = jnp.arange(32, dtype=jnp.int32)
+    s1, m1 = sample_neighbors(jax.random.key(seed), gdev, nodes, fanout, p)
+    s2, m2 = sample_neighbors(jax.random.key(seed), gdev, nodes, fanout, p)
+    assert s1.shape == (32, fanout)
+    assert (np.asarray(s1) == np.asarray(s2)).all()
+    assert (np.asarray(m1) == np.asarray(m2)).all()
