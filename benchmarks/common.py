@@ -1,24 +1,41 @@
-"""Shared benchmark helpers."""
+"""Shared benchmark helpers. All batch construction flows through
+`repro.batching`: policies come from the registry and caps from a shared
+`CapsCalibrator` whose JSON cache under `artifacts/` lets repeated sweeps
+skip the numpy calibration probe."""
 from __future__ import annotations
 
 import functools
+import os
 import time
 
 import numpy as np
 
-from repro.configs.base import (BASELINE_POLICY, CommRandPolicy, GNNConfig,
-                                TrainConfig)
+from repro.batching import CapsCalibrator, make_policy, root_batches
+from repro.configs.base import GNNConfig, TrainConfig
 from repro.core.reorder import prepare
 from repro.graphs import synthetic
 
 POLICIES = {
-    "RAND-ROOTS/p0.5": BASELINE_POLICY,
-    "NORAND-ROOTS/p1.0": CommRandPolicy("norand", 0.0, 1.0),
-    "COMM-RAND-MIX-0%/p1.0": CommRandPolicy("comm_rand", 0.0, 1.0),
-    "COMM-RAND-MIX-12.5%/p1.0": CommRandPolicy("comm_rand", 0.125, 1.0),
-    "COMM-RAND-MIX-25%/p1.0": CommRandPolicy("comm_rand", 0.25, 1.0),
-    "COMM-RAND-MIX-50%/p1.0": CommRandPolicy("comm_rand", 0.5, 1.0),
+    "RAND-ROOTS/p0.5": make_policy("rand"),
+    "NORAND-ROOTS/p1.0": make_policy("norand"),
+    "COMM-RAND-MIX-0%/p1.0": make_policy("comm_rand", mix=0.0, p=1.0),
+    "COMM-RAND-MIX-12.5%/p1.0": make_policy("comm_rand", mix=0.125, p=1.0),
+    "COMM-RAND-MIX-25%/p1.0": make_policy("comm_rand", mix=0.25, p=1.0),
+    "COMM-RAND-MIX-50%/p1.0": make_policy("comm_rand", mix=0.5, p=1.0),
 }
+
+CAPS_CACHE = os.path.join(os.path.dirname(__file__), "artifacts",
+                          "caps_cache.json")
+
+
+def calibrator(seed: int = 0) -> CapsCalibrator:
+    """Disk-cached calibrator shared by every GNN benchmark driver."""
+    return CapsCalibrator(cache_path=CAPS_CACHE, seed=seed)
+
+
+def epoch_batches(g, policy, batch_size: int, seed: int = 0) -> np.ndarray:
+    """One epoch of root-id batches through the `repro.batching` API."""
+    return root_batches(g, policy, batch_size, seed=seed)
 
 
 @functools.lru_cache(maxsize=None)

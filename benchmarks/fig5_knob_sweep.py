@@ -2,8 +2,9 @@
 epochs-to-converge ratio, total-training speedup vs the uniform baseline."""
 from __future__ import annotations
 
-from benchmarks.common import POLICIES, dataset, emit, gnn_cfg, quick_tcfg
-from repro.configs.base import CommRandPolicy
+from benchmarks.common import (POLICIES, calibrator, dataset, emit, gnn_cfg,
+                               quick_tcfg)
+from repro.batching import CommRandPolicy
 from repro.train.gnn_loop import train_once
 
 
@@ -15,7 +16,8 @@ def main(full: bool = False):
         g = dataset(ds)
         cfg = gnn_cfg(g)
         tcfg = quick_tcfg(30 if full else 12)
-        base = train_once(g, cfg, POLICIES["RAND-ROOTS/p0.5"], tcfg, seed=0)
+        base = train_once(g, cfg, POLICIES["RAND-ROOTS/p0.5"], tcfg, seed=0,
+                          calibrator=calibrator())
         emit(f"fig5/{ds}/RAND-ROOTS/p0.5", base.per_epoch_time_s * 1e6,
              f"acc={base.val_acc:.4f};epochs={base.epochs_to_converge};"
              f"total_s={base.total_time_s:.2f};speedup=1.00")
@@ -25,7 +27,8 @@ def main(full: bool = False):
                 key = f"{pol_name}/p1.0"
                 pol0 = POLICIES[key]
                 pol = CommRandPolicy(pol0.root_mode, pol0.mix, p)
-                r = train_once(g, cfg, pol, tcfg, seed=0)
+                r = train_once(g, cfg, pol, tcfg, seed=0,
+                               calibrator=calibrator())
                 emit(f"fig5/{ds}/{pol_name}/p{p}",
                      r.per_epoch_time_s * 1e6,
                      f"acc={r.val_acc:.4f};epochs={r.epochs_to_converge};"

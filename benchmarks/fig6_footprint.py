@@ -4,7 +4,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import POLICIES, dataset, emit, gnn_cfg, quick_tcfg
+from benchmarks.common import (POLICIES, calibrator, dataset, emit, gnn_cfg,
+                               quick_tcfg)
 from repro.train.gnn_loop import train_once
 
 
@@ -14,7 +15,7 @@ def main(full: bool = False):
     tcfg = quick_tcfg(6)
     times, bytes_ = [], []
     for name, pol in POLICIES.items():
-        r = train_once(g, cfg, pol, tcfg, seed=0)
+        r = train_once(g, cfg, pol, tcfg, seed=0, calibrator=calibrator())
         times.append(r.per_epoch_time_s)
         bytes_.append(r.feature_bytes_per_batch)
         emit(f"fig6/{g.name}/{name}", r.per_epoch_time_s * 1e6,

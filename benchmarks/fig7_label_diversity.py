@@ -1,9 +1,8 @@
 """Paper Figure 7: label diversity per batch vs convergence speed."""
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import POLICIES, dataset, emit, gnn_cfg, quick_tcfg
+from benchmarks.common import (POLICIES, calibrator, dataset, emit,
+                               epoch_batches, gnn_cfg, quick_tcfg)
 from repro.core import partition
 from repro.train.gnn_loop import train_once
 
@@ -12,12 +11,10 @@ def main(full: bool = False):
     g = dataset("reddit-like" if full else "tiny")
     cfg = gnn_cfg(g)
     tcfg = quick_tcfg(12, batch=128)
-    rng = np.random.default_rng(0)
     for name, pol in POLICIES.items():
-        batches = partition.batches_for_epoch(
-            g.train_ids, g.communities, pol, tcfg.batch_size, rng)
+        batches = epoch_batches(g, pol, tcfg.batch_size, seed=0)
         lab = partition.labels_per_batch(batches, g.labels)
-        r = train_once(g, cfg, pol, tcfg, seed=0)
+        r = train_once(g, cfg, pol, tcfg, seed=0, calibrator=calibrator())
         emit(f"fig7/{g.name}/{name}", r.per_epoch_time_s * 1e6,
              f"labels_per_batch={lab:.2f};epochs={r.epochs_to_converge}")
 

@@ -6,7 +6,7 @@ import dataclasses
 
 import numpy as np
 
-from benchmarks.common import POLICIES, dataset, emit, gnn_cfg
+from benchmarks.common import POLICIES, calibrator, dataset, emit, gnn_cfg
 from repro.configs.base import TrainConfig
 from repro.train.baselines import train_clustergcn
 from repro.train.gnn_loop import GNNTrainer
@@ -21,7 +21,7 @@ def main(full: bool = False):
         n = max(int(len(g0.train_ids) * frac), 64)
         g = dataclasses.replace(g0, train_ids=g0.train_ids[:n])
         tr = GNNTrainer(g, cfg, tcfg, POLICIES["COMM-RAND-MIX-12.5%/p1.0"],
-                        seed=0).warmup()
+                        seed=0, calibrator=calibrator()).warmup()
         times = [tr.run_epoch(tcfg.learning_rate)["time"] for _ in range(2)]
         cg = train_clustergcn(g, cfg, tcfg, parts_per_batch=2, epochs=2)
         emit(f"fig8/{g0.name}/frac{frac}", np.mean(times) * 1e6,

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import POLICIES, dataset, emit, gnn_cfg
+from benchmarks.common import POLICIES, calibrator, dataset, emit, gnn_cfg
 from repro.configs.base import TrainConfig
 from repro.train.gnn_loop import GNNTrainer
 
@@ -16,7 +16,8 @@ def main(full: bool = False, budget_s: float = None):
     for name in ("RAND-ROOTS/p0.5", "COMM-RAND-MIX-12.5%/p1.0"):
         pol = POLICIES[name]
         tcfg = TrainConfig(batch_size=512, max_epochs=10_000)
-        tr = GNNTrainer(g, cfg, tcfg, pol, seed=0).warmup()
+        tr = GNNTrainer(g, cfg, tcfg, pol, seed=0,
+                        calibrator=calibrator()).warmup()
         t0 = time.perf_counter()
         epochs = 0
         lr = tcfg.learning_rate

@@ -4,9 +4,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import POLICIES, dataset, emit, gnn_cfg
+from benchmarks.common import (POLICIES, calibrator, dataset, emit,
+                               epoch_batches, gnn_cfg)
 from repro.configs.base import TrainConfig
-from repro.core import partition
 from repro.train.baselines import (labor_lite_epoch_footprint,
                                    train_clustergcn)
 from repro.train.gnn_loop import GNNTrainer
@@ -21,7 +21,8 @@ def main(full: bool = False):
         tcfg = TrainConfig(batch_size=512, max_epochs=epochs)
         results = {}
         for name in ("RAND-ROOTS/p0.5", "COMM-RAND-MIX-12.5%/p1.0"):
-            tr = GNNTrainer(g, cfg, tcfg, POLICIES[name], seed=0).warmup()
+            tr = GNNTrainer(g, cfg, tcfg, POLICIES[name], seed=0,
+                            calibrator=calibrator()).warmup()
             times = [tr.run_epoch(tcfg.learning_rate)["time"]
                      for _ in range(epochs)]
             acc = tr.evaluate(g.val_ids)["acc"]
@@ -35,10 +36,7 @@ def main(full: bool = False):
              f"val_acc={cg['val_acc']:.4f};per_epoch_speedup="
              f"{results['RAND-ROOTS/p0.5'][0] / cg['per_epoch_time_s']:.2f}")
         # LABOR-lite: structure-agnostic variance reduction (footprint only)
-        rng = np.random.default_rng(0)
-        batches = partition.batches_for_epoch(
-            g.train_ids, g.communities, POLICIES["RAND-ROOTS/p0.5"], 512,
-            rng)[:4]
+        batches = epoch_batches(g, "labor", 512, seed=0)[:4]
         lf = labor_lite_epoch_footprint(g, batches, cfg.fanout[:2])
         emit(f"table4/{ds}/LABOR-lite", 0.0,
              f"unique_nodes={lf:.0f}")

@@ -2,12 +2,13 @@
 
 Generates a community-structured synthetic graph, preprocesses it
 (community detection -> RABBIT-style reorder -> intra-first rows), then
-trains GraphSAGE under both policies and prints the paper's four metrics.
+trains GraphSAGE under two `repro.batching` policies and prints the
+paper's four metrics.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.configs.base import (BASELINE_POLICY, BEST_POLICY, GNNConfig,
-                                TrainConfig)
+from repro.batching import available_policies, make_policy
+from repro.configs.base import GNNConfig, TrainConfig
 from repro.core.reorder import prepare
 from repro.graphs import synthetic
 from repro.train.gnn_loop import train_once
@@ -18,13 +19,15 @@ def main():
     g = prepare(synthetic.load("tiny"), oracle=False)   # runs Louvain
     print(f"graph: {g.num_nodes} nodes, {g.num_edges} edges, "
           f"{g.communities.max() + 1} detected communities")
+    print(f"registered batch policies: {', '.join(available_policies())}")
 
     cfg = GNNConfig("sage-quickstart", "sage", 2, 64, g.feat_dim,
                     g.num_classes, fanout=(10, 10))
     tcfg = TrainConfig(batch_size=512, max_epochs=15)
 
     rows = []
-    for pol in (BASELINE_POLICY, BEST_POLICY):
+    for pol in (make_policy("rand"),                      # baseline
+                make_policy("comm_rand", mix=0.125, p=1.0)):  # paper §6.1.3
         r = train_once(g, cfg, pol, tcfg, seed=0)
         rows.append(r)
         print(f"{r.policy:28s} val_acc={r.val_acc:.4f} "

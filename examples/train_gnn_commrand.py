@@ -2,12 +2,18 @@
 steps on a reddit-like synthetic graph, with checkpointing + early stopping
 — the paper's training pipeline as a user would run it.
 
+Batch construction is all `repro.batching`: the policy comes from the
+registry, caps from the cached `CapsCalibrator`, and batches from the
+trainer's resumable `BatchStream` — rerun with the same --ckpt-dir after an
+interruption and training continues bit-exactly from the saved cursor.
+
     PYTHONPATH=src python examples/train_gnn_commrand.py \
         --dataset reddit-like --policy comm_rand --mix 0.125 --p 1.0
 """
 import argparse
 
-from repro.configs.base import CommRandPolicy, GNNConfig, TrainConfig
+from repro.batching import CapsCalibrator, make_policy
+from repro.configs.base import GNNConfig, TrainConfig
 from repro.core.reorder import prepare
 from repro.graphs import synthetic
 from repro.train.gnn_loop import GNNTrainer
@@ -26,18 +32,30 @@ def main():
     ap.add_argument("--hidden", type=int, default=256)
     ap.add_argument("--layers", type=int, default=3)
     ap.add_argument("--oracle-communities", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint + resume (cursor travels with weights)")
+    ap.add_argument("--ckpt-every", type=int, default=50,
+                    help="steps between checkpoints (with --ckpt-dir)")
+    ap.add_argument("--caps-cache", default=None,
+                    help="JSON file memoizing calibrated caps across runs")
     args = ap.parse_args()
 
     g = prepare(synthetic.load(args.dataset),
                 oracle=args.oracle_communities)
-    pol = CommRandPolicy(args.policy, args.mix, args.p)
+    pol = make_policy(args.policy, mix=args.mix, p=args.p)
     cfg = GNNConfig(f"sage-{args.dataset}", "sage", args.layers, args.hidden,
                     g.feat_dim, g.num_classes,
                     fanout=(10,) * args.layers)
     tcfg = TrainConfig(batch_size=args.batch_size, max_epochs=args.epochs)
     print(f"policy: {pol.describe()}  graph: {g.name} ({g.num_nodes} nodes)")
-    tr = GNNTrainer(g, cfg, tcfg, pol, seed=0).warmup()
+    tr = GNNTrainer(g, cfg, tcfg, pol, seed=0, ckpt_dir=args.ckpt_dir,
+                    ckpt_every=args.ckpt_every,
+                    calibrator=CapsCalibrator(cache_path=args.caps_cache)
+                    ).warmup()
     print(f"calibrated caps: {tr.caps}")
+    if tr.global_step:
+        print(f"resumed at step {tr.global_step} "
+              f"(cursor: {tr.stream.cursor.state()})")
     res = tr.fit(verbose=True)
     print(f"\nbest val_acc={res.val_acc:.4f} test_acc={res.test_acc:.4f} "
           f"epochs={res.epochs_to_converge} "

@@ -1,0 +1,47 @@
+"""Policy-driven mini-batch construction (the paper's contribution as an
+API).
+
+    from repro import batching
+
+    pol = batching.make_policy("comm_rand", mix=0.125, p=1.0)
+    caps = batching.CapsCalibrator().caps_for(g, pol, 1024, (10, 10, 10))
+    stream = batching.BatchStream(g, pol, 1024, (10, 10, 10), caps)
+    for minibatch in stream.epoch(): ...       # resumable via stream.cursor
+
+Submodules: `policy` (BatchPolicy protocol + registry), `order` (the one
+block-shuffle operator), `calibrate` (cached cap calibration), `stream`
+(resumable prefetching `BatchStream` / `eval_batches`).
+
+`policy` and `order` are numpy-only and import eagerly (configs depend on
+them); `stream`/`calibrate` pull in jax + the device builder and load
+lazily via PEP 562 so `configs.base -> batching.policy` stays cycle-free.
+"""
+from repro.batching.order import (block_shuffle, community_groups,   # noqa: F401
+                                  make_batches)
+from repro.batching.policy import (BatchPolicy, ClusterGCNPolicy,    # noqa: F401
+                                   CommRandPolicy, LaborPolicy,
+                                   as_policy, available_policies,
+                                   make_policy, register, root_batches)
+
+_LAZY = {
+    "BatchStream": "repro.batching.stream",
+    "Cursor": "repro.batching.stream",
+    "eval_batches": "repro.batching.stream",
+    "CapsCalibrator": "repro.batching.calibrate",
+    "graph_fingerprint": "repro.batching.calibrate",
+}
+
+__all__ = [
+    "BatchPolicy", "BatchStream", "CapsCalibrator", "ClusterGCNPolicy",
+    "CommRandPolicy", "Cursor", "LaborPolicy", "as_policy",
+    "available_policies", "block_shuffle", "community_groups",
+    "eval_batches", "graph_fingerprint", "make_batches", "make_policy",
+    "register", "root_batches",
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro.batching' has no attribute {name!r}")

@@ -1,0 +1,64 @@
+"""The ONE block-shuffle operator behind every ordering policy.
+
+The paper's COMM-RAND (§4.1) and the LM corpus shuffler are the same
+algorithm over different block definitions (graph communities vs corpus
+shards): shuffle blocks as wholes, merge consecutive groups of
+``max(1, round(mix * n_blocks))`` shuffled blocks into super-blocks, then
+shuffle WITHIN each super-block. ``mix=0`` keeps every block contiguous
+(maximum locality); ``mix=1`` degenerates to a full uniform shuffle.
+
+`core.partition.epoch_order` and `data.pipeline.BlockShuffler` both
+delegate here — previously they carried duplicated copies of this loop.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+
+def community_groups(train_ids: np.ndarray,
+                     communities: np.ndarray) -> List[np.ndarray]:
+    """Training-set node ids grouped per community (ascending comm id)."""
+    comm = communities[train_ids]
+    order = np.argsort(comm, kind="stable")
+    sorted_ids = train_ids[order]
+    sorted_comm = comm[order]
+    cuts = np.flatnonzero(np.diff(sorted_comm)) + 1
+    return np.split(sorted_ids, cuts)
+
+
+def block_shuffle(blocks: Sequence[np.ndarray], mix: float,
+                  rng: np.random.Generator) -> np.ndarray:
+    """blocks -> shuffled super-blocks -> intra-shuffled concatenation.
+
+    (1) shuffle blocks as wholes, (2) merge consecutive groups of
+    ``max(1, round(mix * len(blocks)))`` into super-blocks, (3) shuffle the
+    contents of each super-block. Draws from `rng` in exactly that order,
+    so a fixed seed gives a reproducible epoch order.
+    """
+    n = len(blocks)
+    if n == 0:
+        return np.zeros(0, np.int64)
+    order = rng.permutation(n)
+    m = max(1, int(round(mix * n)))
+    out = []
+    for i in range(0, n, m):
+        sb = np.concatenate([blocks[j] for j in order[i:i + m]])
+        rng.shuffle(sb)
+        out.append(sb)
+    return np.concatenate(out)
+
+
+def make_batches(order: np.ndarray, batch_size: int,
+                 drop_last: bool = False) -> np.ndarray:
+    """Split an epoch order into (n_batches, batch_size); last batch padded
+    with -1 unless drop_last."""
+    n = len(order)
+    if drop_last:
+        n_batches = n // batch_size
+        return order[:n_batches * batch_size].reshape(n_batches, batch_size)
+    n_batches = (n + batch_size - 1) // batch_size
+    out = np.full((n_batches, batch_size), -1, order.dtype)
+    out.flat[:n] = order
+    return out

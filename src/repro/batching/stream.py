@@ -1,0 +1,175 @@
+"""Resumable streams of compiled `MiniBatch`es.
+
+`BatchStream` is the single entry point for GNN batch construction: it owns
+the per-epoch root ordering (via a `BatchPolicy`), the jit-compiled static
+batch builder, and an explicit `Cursor(epoch, pos)` that goes into every
+checkpoint — the same resume contract `LMStream` has for the LM corpus.
+
+Determinism contract: everything is derived from `(seed, epoch, pos)` —
+the numpy epoch order from `default_rng((seed, epoch))`, the device
+sampling key from `fold_in(fold_in(key(seed), epoch), pos)`. A stream
+restored mid-epoch from a cursor therefore reproduces the continuation
+bit-exactly, with no RNG state in the checkpoint beyond the cursor itself.
+
+Prefetch: while the consumer runs step i, the builder for batch i+1 has
+already been dispatched (jit dispatch is async), overlapping host batch
+assembly + host->device transfer with device compute.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.batching.order import make_batches
+from repro.batching.policy import BatchPolicy, as_policy
+from repro.core import minibatch as mb
+from repro.graphs.csr import DeviceGraph, Graph
+
+
+@dataclass
+class Cursor:
+    """Stream position: epoch number + batch index within the epoch."""
+    epoch: int = 0
+    pos: int = 0
+
+    def state(self) -> dict:
+        return {"epoch": self.epoch, "pos": self.pos}
+
+    @staticmethod
+    def from_state(d) -> "Cursor":
+        return Cursor(int(d["epoch"]), int(d["pos"]))
+
+
+class BatchStream:
+    """Policy-driven, cursor-resumable stream of compiled `MiniBatch`es."""
+
+    def __init__(self, graph: Graph, policy, batch_size: int, fanouts,
+                 caps, *, seed: int = 0, cursor: Optional[Cursor] = None,
+                 drop_last: bool = False, mode: str = "sample",
+                 device_graph: Optional[DeviceGraph] = None,
+                 labels: Optional[jnp.ndarray] = None,
+                 prefetch: bool = True):
+        self.graph = graph
+        self.policy: BatchPolicy = as_policy(policy)
+        self.batch_size = batch_size
+        self.fanouts = tuple(fanouts)
+        self.caps = tuple(caps)
+        self.seed = seed
+        self.cursor = cursor or Cursor()
+        self.drop_last = drop_last
+        self.mode = mode
+        self.prefetch = prefetch
+        self.g = device_graph or DeviceGraph.from_graph(graph)
+        self.labels = labels if labels is not None \
+            else jnp.asarray(graph.labels)
+        self._order_cache = (-1, None)        # (epoch, (n_batches, B) roots)
+        self._prefetched = None               # (epoch, pos, MiniBatch)
+
+    # -- deterministic derivations ------------------------------------------
+    def root_batches(self, epoch: int) -> np.ndarray:
+        """Root-id batches for `epoch` (cached for the current epoch)."""
+        if self._order_cache[0] != epoch:
+            rng = np.random.default_rng((self.seed, epoch))
+            order = self.policy.epoch_order(
+                self.graph.train_ids, self.graph.communities, rng)
+            self._order_cache = (epoch, make_batches(
+                order, self.batch_size, self.drop_last))
+        return self._order_cache[1]
+
+    def num_batches(self, epoch: int = None) -> int:
+        return len(self.root_batches(
+            self.cursor.epoch if epoch is None else epoch))
+
+    def batch_key(self, epoch: int, pos: int):
+        """PRNG key for batch (epoch, pos) — pure function of the cursor."""
+        k = jax.random.key(self.seed)
+        return jax.random.fold_in(jax.random.fold_in(k, epoch), pos)
+
+    def build(self, roots: np.ndarray, epoch: int, pos: int) -> mb.MiniBatch:
+        """Compile/dispatch the static-shape batch for these roots."""
+        return mb.build_batch(
+            self.batch_key(epoch, pos), self.g,
+            jnp.asarray(roots, jnp.int32), self.labels, self.fanouts,
+            self.caps, self.policy.p, mode=self.mode)
+
+    # -- iteration -----------------------------------------------------------
+    def _take(self, epoch: int, pos: int, batches: np.ndarray) -> mb.MiniBatch:
+        if self._prefetched is not None and \
+                self._prefetched[:2] == (epoch, pos):
+            batch = self._prefetched[2]
+            self._prefetched = None
+            return batch
+        return self.build(batches[pos], epoch, pos)
+
+    def epoch(self) -> Iterator[mb.MiniBatch]:
+        """Yield the REMAINDER of the current epoch (all of it when the
+        cursor sits at pos 0), then advance the cursor to the next epoch.
+        After each yield the cursor already points at the next batch, so a
+        checkpoint taken mid-iteration resumes after the consumed batch."""
+        batches = self.root_batches(self.cursor.epoch)
+        if len(batches) and self.cursor.pos >= len(batches):
+            # a consumer stopped exactly on the epoch boundary: normalize
+            self.cursor.epoch += 1
+            self.cursor.pos = 0
+            self._prefetched = None
+            batches = self.root_batches(self.cursor.epoch)
+        if len(batches) == 0:
+            # empty train set, or drop_last with fewer roots than a batch —
+            # raising beats __iter__ spinning forever on empty epochs
+            raise ValueError(
+                f"epoch {self.cursor.epoch} has no batches "
+                f"({len(self.graph.train_ids)} train ids, batch_size="
+                f"{self.batch_size}, drop_last={self.drop_last})")
+        e = self.cursor.epoch
+        while self.cursor.epoch == e and self.cursor.pos < len(batches):
+            pos = self.cursor.pos
+            batch = self._take(e, pos, batches)
+            self.cursor.pos += 1
+            if self.prefetch and self.cursor.pos < len(batches):
+                self._prefetched = (e, self.cursor.pos,
+                                    self.build(batches[self.cursor.pos], e,
+                                               self.cursor.pos))
+            yield batch
+        if self.cursor.epoch == e:            # exhausted, not broken out of
+            self.cursor.epoch += 1
+            self.cursor.pos = 0
+            self._prefetched = None
+
+    def __iter__(self) -> Iterator[mb.MiniBatch]:
+        while True:
+            yield from self.epoch()
+
+
+def eval_batches(graph: Graph, ids: np.ndarray, batch_size: int, fanouts,
+                 caps, p: float = 0.5, *, seed: int = 0,
+                 mode: str = "sample",
+                 device_graph: Optional[DeviceGraph] = None,
+                 labels: Optional[jnp.ndarray] = None
+                 ) -> Iterator[mb.MiniBatch]:
+    """Deterministic sequential batches over `ids` (padded with -1), with
+    one-batch prefetch. Keys derive from (seed, chunk index) only, so
+    evaluation never perturbs training RNG state."""
+    g = device_graph or DeviceGraph.from_graph(graph)
+    labels = labels if labels is not None else jnp.asarray(graph.labels)
+    fanouts, caps = tuple(fanouts), tuple(caps)
+    key = jax.random.key(seed)
+    chunks = []
+    for i in range(0, len(ids), batch_size):
+        pad = np.full(batch_size, -1, np.int64)
+        chunk = ids[i:i + batch_size]
+        pad[:len(chunk)] = chunk
+        chunks.append(pad)
+
+    def build(j):
+        return mb.build_batch(
+            jax.random.fold_in(key, j), g, jnp.asarray(chunks[j], jnp.int32),
+            labels, fanouts, caps, p, mode=mode)
+
+    nxt = build(0) if chunks else None
+    for j in range(len(chunks)):
+        cur, nxt = nxt, (build(j + 1) if j + 1 < len(chunks) else None)
+        yield cur

@@ -175,33 +175,13 @@ class GNNConfig:
 
 # ---------------------------------------------------------------------------
 # COMM-RAND policy knobs (the paper's contribution, §4)
+#
+# DEPRECATED import location: `CommRandPolicy` lives in
+# `repro.batching.policy` now, registered alongside the other batch
+# policies ("rand" / "norand" / "comm_rand" / "clustergcn" / "labor").
+# This re-export is a shim for existing callers.
 # ---------------------------------------------------------------------------
-@dataclass(frozen=True)
-class CommRandPolicy:
-    """Mini-batch construction policy.
-
-    root_mode:
-      rand      — uniform random shuffle of the training set (baseline)
-      norand    — static, community-ordered (no shuffle)
-      comm_rand — block shuffle (communities as blocks + intra-block shuffle)
-    mix: fraction of #communities merged into one super-block before
-         shuffling (0.0 = MIX-0%, 0.125 = MIX-12.5%, ...). Only for comm_rand.
-    p: intra-community edge weight during neighbor sampling; inter gets 1-p.
-       0.5 = uniform (baseline), 1.0 = intra-only.
-    """
-    root_mode: str = "rand"
-    mix: float = 0.0
-    p: float = 0.5
-
-    def describe(self) -> str:
-        if self.root_mode == "rand":
-            root = "RAND-ROOTS"
-        elif self.root_mode == "norand":
-            root = "NORAND-ROOTS"
-        else:
-            root = f"COMM-RAND-MIX-{self.mix * 100:g}%"
-        return f"{root} p={self.p:g}"
-
+from repro.batching.policy import CommRandPolicy  # noqa: E402,F401
 
 BASELINE_POLICY = CommRandPolicy("rand", 0.0, 0.5)
 NORAND_POLICY = CommRandPolicy("norand", 0.0, 1.0)

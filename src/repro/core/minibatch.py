@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import CommRandPolicy
+from repro.batching.policy import CommRandPolicy
 from repro.core import partition
 from repro.core.sampler import sample_neighbors
 from repro.graphs.csr import DeviceGraph, Graph
@@ -152,14 +152,20 @@ def calibrate_caps(graph: Graph, policy: CommRandPolicy, batch_size: int,
                    fanouts, n_probe: int = 6, margin: float = 1.15,
                    seed: int = 0, align: int = 128) -> Tuple[int, ...]:
     """Policy-derived static caps: max unique nodes per level over probe
-    batches x margin, rounded up to `align` (TPU-friendly shapes)."""
+    batches x margin, rounded up to `align` (TPU-friendly shapes).
+
+    Probe batch indices are drawn uniformly across the epoch: under
+    comm_rand the LEADING batches of an epoch order are community-pure and
+    under-estimate the footprint of the late, mixed batches."""
     rng = np.random.default_rng(seed)
     maxes = np.zeros(len(fanouts), np.int64)
     probes = 0
     while probes < n_probe:
         batches = partition.batches_for_epoch(
             graph.train_ids, graph.communities, policy, batch_size, rng)
-        for b in batches[:max(1, n_probe - probes)]:
+        take = min(max(1, n_probe - probes), len(batches))
+        idx = np.sort(rng.choice(len(batches), size=take, replace=False))
+        for b in batches[idx]:
             sizes, _ = build_batch_np(rng, graph, b, fanouts, policy.p)
             maxes = np.maximum(maxes, sizes[1:])
             probes += 1

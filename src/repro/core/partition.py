@@ -9,64 +9,34 @@ Policies over the training set, per epoch:
 
 k=0 is the paper's COMM-RAND-MIX-0% (block shuffle + intra-community
 shuffle). Larger k mixes more communities -> more randomness, less bias.
+
+DEPRECATED entry point: the ordering logic lives in `repro.batching`
+(`policy.py` dispatches per policy, `order.py` owns the block-shuffle
+operator). These functions are kept as thin delegating shims; the
+figure-diagnostic helpers (`labels_per_batch`, `communities_per_batch`)
+still live here.
 """
 from __future__ import annotations
 
-from typing import List
-
 import numpy as np
 
-from repro.configs.base import CommRandPolicy
+from repro.batching import order as _order
+from repro.batching.policy import as_policy
+# re-exported shims — the canonical implementations moved to repro.batching
+from repro.batching.order import make_batches  # noqa: F401
 
 
 def group_train_by_community(train_ids: np.ndarray,
-                             communities: np.ndarray) -> List[np.ndarray]:
+                             communities: np.ndarray):
     """Training-set node ids grouped per community (ascending comm id)."""
-    comm = communities[train_ids]
-    order = np.argsort(comm, kind="stable")
-    sorted_ids = train_ids[order]
-    sorted_comm = comm[order]
-    cuts = np.flatnonzero(np.diff(sorted_comm)) + 1
-    return np.split(sorted_ids, cuts)
+    return _order.community_groups(train_ids, communities)
 
 
 def epoch_order(train_ids: np.ndarray, communities: np.ndarray,
-                policy: CommRandPolicy, rng: np.random.Generator
-                ) -> np.ndarray:
+                policy, rng: np.random.Generator) -> np.ndarray:
     """The (possibly constrained-random) permutation of the training set for
-    one epoch."""
-    if policy.root_mode == "rand":
-        return rng.permutation(train_ids)
-    groups = group_train_by_community(train_ids, communities)
-    if policy.root_mode == "norand":
-        return np.concatenate(groups)
-    if policy.root_mode != "comm_rand":
-        raise ValueError(policy.root_mode)
-    n_comm = len(groups)
-    # (1) shuffle communities as whole blocks
-    block_order = rng.permutation(n_comm)
-    # (2) merge consecutive shuffled blocks into super-blocks of m
-    m = max(1, int(round(policy.mix * n_comm)))
-    out = []
-    for i in range(0, n_comm, m):
-        sb = np.concatenate([groups[j] for j in block_order[i:i + m]])
-        rng.shuffle(sb)              # (3) shuffle within the super-block
-        out.append(sb)
-    return np.concatenate(out)
-
-
-def make_batches(order: np.ndarray, batch_size: int,
-                 drop_last: bool = False) -> np.ndarray:
-    """Split an epoch order into (n_batches, batch_size); last batch padded
-    with -1 unless drop_last."""
-    n = len(order)
-    if drop_last:
-        n_batches = n // batch_size
-        return order[:n_batches * batch_size].reshape(n_batches, batch_size)
-    n_batches = (n + batch_size - 1) // batch_size
-    out = np.full((n_batches, batch_size), -1, order.dtype)
-    out.flat[:n] = order
-    return out
+    one epoch. `policy` may be a policy object or a registered name."""
+    return as_policy(policy).epoch_order(train_ids, communities, rng)
 
 
 def batches_for_epoch(train_ids, communities, policy, batch_size, rng,

@@ -4,11 +4,13 @@
 (DESIGN.md §5): the corpus is treated as blocks (shards / domains /
 communities); blocks are shuffled as wholes, groups of `mix` blocks merge
 into super-blocks whose contents are shuffled — giving shard-local read
-locality with controlled randomness. `core.partition.epoch_order` is the
-graph-specialized instance of the same operator.
+locality with controlled randomness. The operator itself lives in
+`repro.batching.order.block_shuffle`; `core.partition.epoch_order` applies
+the same operator to graph communities.
 
-The stream carries an explicit cursor (epoch, position) that is part of
-every checkpoint — resume is bit-exact.
+The stream carries an explicit cursor (epoch, position) — the shared
+`repro.batching.Cursor` — that is part of every checkpoint; resume is
+bit-exact.
 """
 from __future__ import annotations
 
@@ -16,6 +18,9 @@ from dataclasses import dataclass
 from typing import Iterator, Tuple
 
 import numpy as np
+
+from repro.batching.order import block_shuffle
+from repro.batching.stream import Cursor  # noqa: F401 — shared re-export
 
 
 @dataclass
@@ -34,15 +39,7 @@ class BlockShuffler:
         if self.mode == "rand":
             return rng.permutation(idx)
         n_blocks = (self.num_items + self.block_size - 1) // self.block_size
-        blocks = np.array_split(idx, n_blocks)
-        order = rng.permutation(n_blocks)
-        m = max(1, int(round(self.mix * n_blocks)))
-        out = []
-        for i in range(0, n_blocks, m):
-            sb = np.concatenate([blocks[j] for j in order[i:i + m]])
-            rng.shuffle(sb)
-            out.append(sb)
-        return np.concatenate(out)
+        return block_shuffle(np.array_split(idx, n_blocks), self.mix, rng)
 
 
 class SyntheticTokens:
@@ -63,19 +60,6 @@ class SyntheticTokens:
         # inject a repeated local pattern -> learnable bigram structure
         tok[1::2] = (tok[::2][: len(tok[1::2])] * 7 + 3) % (self.vocab - 2) + 1
         return tok
-
-
-@dataclass
-class Cursor:
-    epoch: int = 0
-    pos: int = 0
-
-    def state(self) -> dict:
-        return {"epoch": self.epoch, "pos": self.pos}
-
-    @staticmethod
-    def from_state(d) -> "Cursor":
-        return Cursor(int(d["epoch"]), int(d["pos"]))
 
 
 class LMStream:

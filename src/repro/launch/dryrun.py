@@ -230,6 +230,8 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # jax 0.4.x returns [dict] per module
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     meta = {
         "arch": arch, "shape": shape_name,

@@ -172,9 +172,11 @@ def lower_gnn_cell(policy_name: str, multi_pod: bool = False):
 
 
 def partial_shard_map(mesh, in_specs, out_specs):
+    from repro.dist.sharding import shard_map
+
     def deco(f):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs)
     return deco
 
 

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.batching.policy import ClusterGCNPolicy
 from repro.configs.base import GNNConfig, TrainConfig
 from repro.core import minibatch as mb
 from repro.graphs.csr import Graph
@@ -34,12 +35,10 @@ from repro.train.losses import accuracy, gnn_softmax_ce
 # ---------------------------------------------------------------------------
 def clustergcn_batches(graph: Graph, parts_per_batch: int,
                        rng: np.random.Generator) -> List[np.ndarray]:
-    """Random unions of `parts_per_batch` communities (one epoch)."""
-    n_comm = graph.communities.max() + 1
-    order = rng.permutation(n_comm)
-    groups = np.split(order, range(parts_per_batch, n_comm, parts_per_batch))
-    members = [np.where(np.isin(graph.communities, g))[0] for g in groups]
-    return members
+    """Random unions of `parts_per_batch` communities (one epoch) — the
+    registered `repro.batching` "clustergcn" policy's node grouping."""
+    pol = ClusterGCNPolicy(parts_per_batch=parts_per_batch)
+    return pol.member_groups(graph.communities, rng)
 
 
 def induced_subgraph(graph: Graph, nodes: np.ndarray, cap_n: int,

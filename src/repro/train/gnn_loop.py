@@ -3,6 +3,14 @@ AdamW(lr=1e-3, wd=5e-4), batch 1024, fanout 10 per hop, up to 100 epochs,
 early stopping on val loss (patience 6), ReduceLROnPlateau (patience 3),
 metrics: final val acc, per-epoch time, epochs-to-converge, total time, and
 the Fig-6 working-set metric (mean unique input nodes / feature bytes).
+
+Batch construction goes through `repro.batching` end to end: the trainer
+consumes a `BatchStream` whose `Cursor(epoch, pos)` is saved in every
+checkpoint, so interrupted GNN runs resume bit-exactly (the contract the LM
+trainer has always had). Dropout keys derive from the same (seed, epoch,
+pos) as the stream, and `fit()`'s scheduler state (lr, plateau/early-stop
+counters, best-so-far weights) is checkpointed alongside the cursor, so a
+resumed run replays the same training trajectory.
 """
 from __future__ import annotations
 
@@ -15,13 +23,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import CommRandPolicy, GNNConfig, TrainConfig
+from repro.batching import (BatchStream, CapsCalibrator, Cursor, as_policy,
+                            eval_batches, make_policy)
+from repro.configs.base import GNNConfig, TrainConfig
 from repro.core import minibatch as mb
-from repro.core import partition
 from repro.graphs.csr import DeviceGraph, Graph
 from repro.models.gnn.models import apply_gnn, init_gnn
 from repro.optim import adamw
 from repro.optim.schedule import EarlyStopping, ReduceLROnPlateau
+from repro.train import checkpoint as ckpt
 from repro.train.losses import accuracy, gnn_softmax_ce
 
 
@@ -78,40 +88,76 @@ def _make_steps(cfg: GNNConfig, tcfg: TrainConfig, caps, fanouts):
 
 
 class GNNTrainer:
-    """One (graph, model, policy) training run."""
+    """One (graph, model, policy) training run over a `BatchStream`."""
 
     def __init__(self, graph: Graph, cfg: GNNConfig, tcfg: TrainConfig,
-                 policy: CommRandPolicy, caps=None, eval_caps=None,
-                 seed: int = 0):
+                 policy, caps=None, eval_caps=None, seed: int = 0,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
+                 calibrator: Optional[CapsCalibrator] = None):
         self.graph = graph
         self.cfg = cfg
         self.tcfg = tcfg
-        self.policy = policy
-        self.rng = np.random.default_rng(seed)
-        self.key = jax.random.key(seed)
+        self.policy = as_policy(policy)
+        self.seed = seed
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
         self.g = DeviceGraph.from_graph(graph)
         self.feats = jnp.asarray(graph.features)
         self.labels = jnp.asarray(graph.labels)
         self.degrees = self.g.degrees
         self.fanouts = tuple(cfg.fanout[:cfg.num_layers])
-        self.caps = caps or mb.calibrate_caps(
-            graph, policy, tcfg.batch_size, self.fanouts, seed=seed)
+        cal = calibrator or CapsCalibrator(seed=seed)
+        self.caps = caps or cal.caps_for(
+            graph, self.policy, tcfg.batch_size, self.fanouts)
         # eval always uses the uniform policy (identical across compared
         # policies) — calibrate once with p=0.5
-        self.eval_policy = CommRandPolicy("rand", 0.0, 0.5)
-        self.eval_caps = eval_caps or mb.calibrate_caps(
-            graph, self.eval_policy, tcfg.batch_size, self.fanouts,
-            seed=seed + 1)
+        self.eval_policy = make_policy("rand")
+        eval_cal = calibrator or CapsCalibrator(seed=seed + 1)
+        self.eval_caps = eval_caps or eval_cal.caps_for(
+            graph, self.eval_policy, tcfg.batch_size, self.fanouts)
         self.train_step, self.eval_step = _make_steps(
             cfg, tcfg, self.caps, self.fanouts)
         self.params = init_gnn(cfg, jax.random.key(seed))
         self.opt_state = adamw.init(self.params)
+        self.stream = BatchStream(
+            graph, self.policy, tcfg.batch_size, self.fanouts, self.caps,
+            seed=seed, device_graph=self.g, labels=self.labels)
+        self.global_step = 0
+        self._best_params = None      # best-val weights seen by fit()
+        self._fit_state = None        # lr / plateau / early-stop counters
+        if ckpt_dir:
+            self._try_resume()
 
-    def _build(self, roots_np, caps, p):
-        self.key, k = jax.random.split(self.key)
-        roots = jnp.asarray(roots_np, jnp.int32)
-        return mb.build_batch(k, self.g, roots, self.labels, self.fanouts,
-                              caps, p)
+    # -- checkpoint/resume (cursor + fit state travel with the weights) -----
+    def _state(self):
+        best = self._best_params if self._best_params is not None \
+            else self.params
+        return {"params": self.params, "opt": self.opt_state, "best": best}
+
+    def save(self) -> None:
+        if not self.ckpt_dir:
+            return
+        ckpt.save(self.ckpt_dir, self.global_step, self._state(),
+                  extra={"cursor": self.stream.cursor.state(),
+                         "fit": self._fit_state})
+
+    def _try_resume(self) -> None:
+        step, tree, extra = ckpt.restore_latest(self.ckpt_dir, self._state())
+        if step is None:
+            return
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self._best_params = tree["best"]
+        self.global_step = step
+        self.stream.cursor = Cursor.from_state(extra["cursor"])
+        self._fit_state = extra.get("fit")
+
+    # -- batch building -----------------------------------------------------
+    def _dropout_key(self):
+        """Derived from the batch the stream just yielded (cursor already
+        advanced), so resumed runs replay identical dropout masks."""
+        return jax.random.fold_in(
+            self.stream.batch_key(self.stream.cursor.epoch,
+                                  self.stream.cursor.pos - 1), 1)
 
     def warmup(self):
         """Trigger all jit compilations without disturbing training state
@@ -121,28 +167,35 @@ class GNNTrainer:
         roots = np.full(self.tcfg.batch_size, -1, np.int64)
         roots[:min(len(self.graph.train_ids), 8)] = \
             self.graph.train_ids[:8]
-        b = self._build(roots, self.caps, self.policy.p)
+        b = mb.build_batch(jax.random.key(0), self.g,
+                           jnp.asarray(roots, jnp.int32), self.labels,
+                           self.fanouts, self.caps, self.policy.p)
         self.params, self.opt_state, _ = self.train_step(
             self.params, self.opt_state, b, self.feats, self.degrees,
             0.0, jax.random.key(0))
-        be = self._build(roots, self.eval_caps, self.eval_policy.p)
+        be = mb.build_batch(jax.random.key(0), self.g,
+                            jnp.asarray(roots, jnp.int32), self.labels,
+                            self.fanouts, self.eval_caps, self.eval_policy.p)
         self.eval_step(self.params, be, self.feats, self.degrees)
         self.params, self.opt_state = saved
         return self
 
+    def _train_one(self, batch: mb.MiniBatch, lr: float):
+        self.params, self.opt_state, loss = self.train_step(
+            self.params, self.opt_state, batch, self.feats, self.degrees,
+            lr, self._dropout_key())
+        self.global_step += 1
+        if self.ckpt_dir and self.ckpt_every and \
+                self.global_step % self.ckpt_every == 0:
+            self.save()
+        return loss
+
     def run_epoch(self, lr: float) -> Dict:
+        """Consume the remainder of the stream's current epoch."""
         t0 = time.perf_counter()
-        batches = partition.batches_for_epoch(
-            self.graph.train_ids, self.graph.communities, self.policy,
-            self.tcfg.batch_size, self.rng)
         losses, uniq = [], []
-        for b in batches:
-            batch = self._build(b, self.caps, self.policy.p)
-            self.key, k = jax.random.split(self.key)
-            self.params, self.opt_state, loss = self.train_step(
-                self.params, self.opt_state, batch, self.feats,
-                self.degrees, lr, k)
-            losses.append(loss)
+        for batch in self.stream.epoch():
+            losses.append(self._train_one(batch, lr))
             uniq.append(batch.num_unique)
         jax.block_until_ready(losses[-1])
         dt = time.perf_counter() - t0
@@ -150,13 +203,21 @@ class GNNTrainer:
                 "time": dt,
                 "uniq": float(np.mean([float(u) for u in uniq]))}
 
+    def train_steps(self, n: int, lr: Optional[float] = None) -> List[float]:
+        """Consume exactly `n` batches (crossing epoch boundaries)."""
+        lr = self.tcfg.learning_rate if lr is None else lr
+        it = iter(self.stream)
+        # keep losses on device until the end: a float() per step would
+        # sync every batch and serialize away the stream's prefetch overlap
+        losses = [self._train_one(next(it), lr) for _ in range(n)]
+        return [float(l) for l in losses]
+
     def evaluate(self, ids: np.ndarray) -> Dict:
         tot_l, tot_a, tot_n = 0.0, 0.0, 0.0
-        for i in range(0, len(ids), self.tcfg.batch_size):
-            chunk = ids[i:i + self.tcfg.batch_size]
-            pad = np.full(self.tcfg.batch_size, -1, np.int64)
-            pad[:len(chunk)] = chunk
-            batch = self._build(pad, self.eval_caps, self.eval_policy.p)
+        for batch in eval_batches(
+                self.graph, ids, self.tcfg.batch_size, self.fanouts,
+                self.eval_caps, self.eval_policy.p, seed=self.seed + 17,
+                device_graph=self.g, labels=self.labels):
             l, a, n = self.eval_step(self.params, batch, self.feats,
                                      self.degrees)
             n = float(n)
@@ -171,10 +232,23 @@ class GNNTrainer:
                                     self.tcfg.plateau_factor,
                                     self.tcfg.plateau_patience)
         history: List[EpochMetrics] = []
-        best_val_acc, best_params = 0.0, self.params
+        best_val_acc = 0.0
+        best_params = self._best_params if self._best_params is not None \
+            else self.params
         lr = self.tcfg.learning_rate
+        start_epoch = 0
+        if self._fit_state:                   # resumed mid-training
+            fs = self._fit_state
+            lr, start_epoch = fs["lr"], fs["epoch"]
+            best_val_acc = fs["best_val_acc"]
+            plateau.lr, plateau.best, plateau.bad = fs["plateau"]
+            stopper.best, stopper.bad, stopper.best_epoch = fs["stopper"]
+        if stopper.bad >= stopper.patience:
+            # checkpoint came from an ALREADY-FINISHED (early-stopped) run:
+            # don't train further from best_params
+            start_epoch = self.tcfg.max_epochs
         t_start = time.perf_counter()
-        for epoch in range(self.tcfg.max_epochs):
+        for epoch in range(start_epoch, self.tcfg.max_epochs):
             em = self.run_epoch(lr)
             ev = self.evaluate(self.graph.val_ids)
             history.append(EpochMetrics(epoch, em["loss"], ev["loss"],
@@ -187,34 +261,46 @@ class GNNTrainer:
                 best_val_acc = ev["acc"]
                 best_params = jax.tree.map(lambda x: x, self.params)
             lr = plateau.step(ev["loss"])
-            if stopper.update(ev["loss"], epoch):
+            stop = stopper.update(ev["loss"], epoch)
+            self._best_params = best_params
+            self._fit_state = {
+                "lr": lr, "epoch": epoch + 1, "best_val_acc": best_val_acc,
+                "plateau": [plateau.lr, plateau.best, plateau.bad],
+                "stopper": [stopper.best, stopper.bad, stopper.best_epoch],
+            }
+            if stop:
                 break
         total = time.perf_counter() - t_start
         self.params = best_params
+        if self.ckpt_dir:
+            self.save()
         test = self.evaluate(self.graph.test_ids)
         n_epochs = len(history)
+
+        def _mean(xs):                # empty when resuming a finished run
+            return float(np.mean(xs)) if xs else 0.0
+
         return TrainResult(
             policy=self.policy.describe(),
             val_acc=best_val_acc,
             test_acc=test["acc"],
             epochs_to_converge=stopper.best_epoch + 1
             if stopper.best_epoch >= 0 else n_epochs,
-            per_epoch_time_s=float(np.mean([h.epoch_time_s
-                                            for h in history])),
+            per_epoch_time_s=_mean([h.epoch_time_s for h in history]),
             total_time_s=total,
-            mean_unique_nodes=float(np.mean([h.mean_unique_nodes
-                                             for h in history])),
-            feature_bytes_per_batch=float(np.mean(
-                [h.mean_unique_nodes for h in history]))
+            mean_unique_nodes=_mean([h.mean_unique_nodes for h in history]),
+            feature_bytes_per_batch=_mean([h.mean_unique_nodes
+                                           for h in history])
             * self.graph.feat_dim * 4,
             caps=self.caps,
             history=history,
         )
 
 
-def train_once(graph: Graph, cfg: GNNConfig, policy: CommRandPolicy,
+def train_once(graph: Graph, cfg: GNNConfig, policy,
                tcfg: Optional[TrainConfig] = None, seed: int = 0,
-               verbose: bool = False) -> TrainResult:
+               verbose: bool = False,
+               calibrator: Optional[CapsCalibrator] = None) -> TrainResult:
     tcfg = tcfg or TrainConfig()
-    return GNNTrainer(graph, cfg, tcfg, policy,
-                      seed=seed).warmup().fit(verbose)
+    return GNNTrainer(graph, cfg, tcfg, policy, seed=seed,
+                      calibrator=calibrator).warmup().fit(verbose)

@@ -1,3 +1,5 @@
+import sys
+
 import jax
 import numpy as np
 import pytest
@@ -6,6 +8,13 @@ import pytest
 # Multi-device tests spawn subprocesses with their own flags.
 
 jax.config.update("jax_platform_name", "cpu")
+
+try:
+    import hypothesis  # noqa: F401 — the real package wins when installed
+except ModuleNotFoundError:
+    import _hypothesis_stub
+    sys.modules["hypothesis"] = _hypothesis_stub
+    sys.modules["hypothesis.strategies"] = _hypothesis_stub.strategies
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,184 @@
+"""The `repro.batching` subsystem: policy registry invariants, bit-exact
+cursor resume, calibrator caching, and GNNTrainer checkpoint round-trips."""
+import numpy as np
+import pytest
+
+from repro import batching
+from repro.batching import (BatchStream, CapsCalibrator, Cursor,
+                            available_policies, make_policy, root_batches)
+from repro.core import partition
+
+
+FANOUTS = (5, 5)
+CAPS = (1024, 1536)
+
+
+# ---------------------------------------------------------------------------
+# registry / policies
+# ---------------------------------------------------------------------------
+def test_registry_has_all_paper_policies():
+    assert set(available_policies()) >= {"rand", "norand", "comm_rand",
+                                         "clustergcn", "labor"}
+
+
+@pytest.mark.parametrize("name", ["rand", "norand", "comm_rand",
+                                  "clustergcn", "labor"])
+def test_every_registered_policy_yields_a_permutation(name, tiny_graph):
+    g = tiny_graph
+    pol = make_policy(name)
+    rng = np.random.default_rng(0)
+    order = pol.epoch_order(g.train_ids, g.communities, rng)
+    assert np.array_equal(np.sort(order), np.sort(g.train_ids))
+    assert pol.describe()
+    assert 0.0 <= pol.p <= 1.0
+
+
+def test_commrand_mix1_matches_rand_label_diversity(tiny_graph):
+    """mix=1.0 merges every community into ONE super-block, i.e. a full
+    uniform shuffle: its per-batch label diversity matches rand's."""
+    g = tiny_graph
+    div = {}
+    for name, pol in [("rand", make_policy("rand")),
+                      ("mix1", make_policy("comm_rand", mix=1.0, p=0.5))]:
+        labs = [partition.labels_per_batch(
+            root_batches(g, pol, 128, seed=s), g.labels) for s in range(4)]
+        div[name] = float(np.mean(labs))
+    assert div["mix1"] == pytest.approx(div["rand"], rel=0.05)
+
+
+def test_root_batches_matches_partition_shim(tiny_graph):
+    """Old entry point (core.partition) and new API agree batch-for-batch."""
+    g = tiny_graph
+    pol = make_policy("comm_rand", mix=0.125, p=1.0)
+    new = root_batches(g, pol, 256, seed=3, epoch=2)
+    old = partition.batches_for_epoch(
+        g.train_ids, g.communities, pol, 256,
+        np.random.default_rng((3, 2)))
+    assert np.array_equal(new, old)
+
+
+def test_blockshuffler_uses_shared_operator():
+    """data.pipeline.BlockShuffler == batching.block_shuffle bit-for-bit."""
+    from repro.data.pipeline import BlockShuffler
+    sh = BlockShuffler(100, 10, mix=0.25, mode="block", seed=5)
+    got = sh.epoch_order(3)
+    rng = np.random.default_rng((5, 3))
+    want = batching.block_shuffle(
+        np.array_split(np.arange(100), 10), 0.25, rng)
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# BatchStream cursor resume
+# ---------------------------------------------------------------------------
+def _stream(g, cursor=None, seed=7):
+    return BatchStream(g, make_policy("comm_rand", mix=0.125, p=1.0), 256,
+                       FANOUTS, CAPS, seed=seed, cursor=cursor)
+
+
+def _assert_batches_equal(a, b):
+    for la, lb in zip(a.levels, b.levels):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    np.testing.assert_array_equal(np.asarray(a.labels), np.asarray(b.labels))
+    np.testing.assert_array_equal(np.asarray(a.label_mask),
+                                  np.asarray(b.label_mask))
+
+
+def test_batchstream_cursor_resume_is_bit_exact(tiny_graph):
+    s1 = _stream(tiny_graph)
+    it1 = iter(s1)
+    for _ in range(3):
+        next(it1)                             # consume 3 batches
+    saved = Cursor.from_state(s1.cursor.state())
+
+    s2 = _stream(tiny_graph, cursor=saved)    # fresh stream, restored cursor
+    it2 = iter(s2)
+    for _ in range(4):                        # crosses the epoch boundary
+        _assert_batches_equal(next(it1), next(it2))
+    assert s1.cursor.state() == s2.cursor.state()
+
+
+def test_batchstream_epoch_covers_train_set_once(tiny_graph):
+    s = _stream(tiny_graph)
+    roots = []
+    for b in s.epoch():
+        lv = np.asarray(b.levels[0])
+        roots.append(lv[np.asarray(b.label_mask)])
+    assert np.array_equal(np.sort(np.concatenate(roots)),
+                          np.sort(tiny_graph.train_ids))
+    assert s.cursor.state() == {"epoch": 1, "pos": 0}
+
+
+# ---------------------------------------------------------------------------
+# CapsCalibrator cache
+# ---------------------------------------------------------------------------
+def test_capscalibrator_cache_hit_returns_identical_caps(tiny_graph,
+                                                         tmp_path,
+                                                         monkeypatch):
+    path = str(tmp_path / "caps.json")
+    pol = make_policy("comm_rand", mix=0.125, p=1.0)
+    caps1 = CapsCalibrator(cache_path=path, n_probe=4).caps_for(
+        tiny_graph, pol, 128, FANOUTS)
+
+    # a cache hit must not re-run the probe
+    from repro.core import minibatch as mb_mod
+
+    def boom(*a, **k):
+        raise AssertionError("probe ran on a cache hit")
+
+    monkeypatch.setattr(mb_mod, "calibrate_caps", boom)
+    caps2 = CapsCalibrator(cache_path=path, n_probe=4).caps_for(
+        tiny_graph, pol, 128, FANOUTS)
+    assert caps1 == caps2
+
+    # different knobs -> different key -> probe would run again
+    with pytest.raises(AssertionError):
+        CapsCalibrator(cache_path=path, n_probe=4).caps_for(
+            tiny_graph, pol, 64, FANOUTS)
+
+
+def test_calibrate_probes_are_spread_across_epoch(tiny_graph):
+    """The probe-bias fix: comm_rand caps must hold for LATE (mixed)
+    batches, not just the community-pure leading ones."""
+    from repro.core.minibatch import build_batch_np, calibrate_caps
+    pol = make_policy("comm_rand", mix=0.25, p=1.0)
+    caps = calibrate_caps(tiny_graph, pol, 128, FANOUTS, n_probe=6)
+    rng = np.random.default_rng(11)
+    batches = partition.batches_for_epoch(
+        tiny_graph.train_ids, tiny_graph.communities, pol, 128, rng)
+    sizes, _ = build_batch_np(rng, tiny_graph, batches[-1], FANOUTS, pol.p)
+    assert sizes[-1] <= caps[-1]
+
+
+# ---------------------------------------------------------------------------
+# GNNTrainer checkpoint round-trip (ISSUE acceptance)
+# ---------------------------------------------------------------------------
+def test_gnn_trainer_cursor_roundtrips_through_checkpoint(tiny_graph,
+                                                          tmp_path):
+    import jax
+    from repro.configs.base import GNNConfig, TrainConfig
+    from repro.train.gnn_loop import GNNTrainer
+
+    g = tiny_graph
+    cfg = GNNConfig("sage-ckpt", "sage", 2, 32, g.feat_dim, g.num_classes,
+                    fanout=FANOUTS)
+    tcfg = TrainConfig(batch_size=256, max_epochs=4)
+    d = str(tmp_path / "ckpt")
+
+    tr1 = GNNTrainer(g, cfg, tcfg, make_policy("comm_rand", mix=0.125, p=1.0),
+                     caps=CAPS, eval_caps=CAPS, seed=0, ckpt_dir=d)
+    tr1.train_steps(3)
+    tr1.save()                                # mid-epoch checkpoint
+    saved_cursor = tr1.stream.cursor.state()
+    cont1 = tr1.train_steps(2)                # ground-truth continuation
+
+    tr2 = GNNTrainer(g, cfg, tcfg, make_policy("comm_rand", mix=0.125, p=1.0),
+                     caps=CAPS, eval_caps=CAPS, seed=0, ckpt_dir=d)
+    assert tr2.global_step == 3
+    assert tr2.stream.cursor.state() == saved_cursor
+    for a, b in zip(jax.tree.leaves(tr1.opt_state),
+                    jax.tree.leaves(tr2.opt_state)):
+        assert np.asarray(a).shape == np.asarray(b).shape
+    cont2 = tr2.train_steps(2)
+    # bit-exact: same batches, same dropout keys, same arithmetic
+    assert cont1 == cont2

@@ -10,6 +10,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import halo
+from repro.dist.sharding import shard_map
 
 D, Ns, F, K = 8, 32, 16, 24
 mesh = Mesh(np.array(jax.devices()[:D]), ("shard",))
@@ -28,11 +29,11 @@ ids_sh = jax.device_put(jnp.asarray(ids),
                         NamedSharding(mesh, P("shard", None)))
 
 for mode, r_cap, h in (("halo", 8, 2), ("global", 0, 0)):
-    fn = jax.jit(jax.shard_map(
+    fn = jax.jit(shard_map(
         lambda f, i: tuple(x[None] for x in halo.gather_for_policy(
             f, i[0], n_per_shard=Ns, r_cap=r_cap, halo=h, mode=mode)),
         mesh=mesh, in_specs=(P("shard", None), P("shard", None)),
-        out_specs=(P("shard", None, None), P("shard")), check_vma=False))
+        out_specs=(P("shard", None, None), P("shard"))))
     out, dropped = fn(feats_sh, ids_sh)
     ref = np.asarray(feats)[ids]
     np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-6)
@@ -42,11 +43,11 @@ print("HALO_OK")
 # out-of-budget ids are dropped and counted, not wrong
 ids2 = ids.copy(); ids2[:, 0] = (ids[:, 0] + 4 * Ns) % (D * Ns)
 ids2_sh = jax.device_put(jnp.asarray(ids2), NamedSharding(mesh, P("shard", None)))
-fn = jax.jit(jax.shard_map(
+fn = jax.jit(shard_map(
     lambda f, i: tuple(x[None] for x in halo.gather_for_policy(
         f, i[0], n_per_shard=Ns, r_cap=8, halo=2, mode="halo")),
     mesh=mesh, in_specs=(P("shard", None), P("shard", None)),
-    out_specs=(P("shard", None, None), P("shard")), check_vma=False))
+    out_specs=(P("shard", None, None), P("shard"))))
 out, dropped = fn(feats_sh, ids2_sh)
 assert int(np.asarray(dropped).sum()) > 0
 print("HALO_DROP_OK")

@@ -70,7 +70,10 @@ def test_prefill_and_decode_match_forward(arch):
         lg, cache = transformer.decode_step(
             cfg, params, cache, batch["tokens"][:, t:t + 1], t, **kw)
         errs.append(float(jnp.max(jnp.abs(lg[:, 0] - full_logits[:, t]))))
-    assert max(errs) < 1e-2, max(errs)
+    # one bf16 ulp at |logit|~4 is 0.0156; the hybrid arch sums two
+    # normalized branches, so allow 2 ulps there
+    tol = 4e-2 if cfg.hybrid else 1e-2
+    assert max(errs) < tol, max(errs)
 
 
 def test_long_context_skip_policy():
