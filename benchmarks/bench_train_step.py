@@ -1,0 +1,70 @@
+"""Timing of the jit'd GNN train/eval steps for sage/gcn/gat on BOTH
+`agg_impl` paths, plus the jaxpr-level check that the fused path removed
+the up-front (cap_L, F) feature pre-gather from the compiled train step.
+
+Off-TPU the "pallas" rows run the kernels in interpret mode — those wall
+times validate shapes/plumbing, not throughput (see BENCH_kernels.json
+`_meta`). Results merge into BENCH_kernels.json at the repo root.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import (calibrator, dataset, emit, quick_tcfg,
+                               timer_us, write_bench_json)
+from repro.batching import make_policy
+from repro.configs.base import GNNConfig
+from repro.train.gnn_loop import GNNTrainer
+
+MODELS = ("sage", "gcn", "gat")
+
+
+def _pre_gather_in_jaxpr(tr: GNNTrainer, batch) -> bool:
+    """True iff the compiled train step still materializes the input-level
+    (cap_L, F) feature copy (an f32[cap_L, F] intermediate)."""
+    cap_l = int(batch.node_ids.shape[0])
+    feat = int(tr.feats.shape[1])
+    jaxpr = jax.make_jaxpr(tr.train_step)(
+        tr.params, tr.opt_state, batch, tr.feats, tr.degrees, 1e-3,
+        jax.random.key(0))
+    return f"f32[{cap_l},{feat}]" in str(jaxpr)
+
+
+def main(full: bool = False):
+    g = dataset("tiny")
+    tcfg = quick_tcfg(batch=256)
+    pol = make_policy("comm_rand", mix=0.125, p=1.0)
+    fanout = (8, 8) if full else (5, 5)
+    entries = {}
+    for model in MODELS:
+        for impl in ("jnp", "pallas"):
+            cfg = GNNConfig(f"{model}-bench", model, 2, 64, g.feat_dim,
+                            g.num_classes, fanout=fanout, agg_impl=impl)
+            tr = GNNTrainer(g, cfg, tcfg, pol, seed=0,
+                            calibrator=calibrator())
+            batch = next(iter(tr.stream))
+            us_train = timer_us(tr.train_step, tr.params, tr.opt_state,
+                                batch, tr.feats, tr.degrees, 1e-3,
+                                jax.random.key(0))
+            us_eval = timer_us(tr.eval_step, tr.params, batch, tr.feats,
+                               tr.degrees)
+            pre = _pre_gather_in_jaxpr(tr, batch)
+            cap_l = int(batch.node_ids.shape[0])
+            emit(f"train_step/{model}/{impl}", us_train,
+                 f"cap_L={cap_l};pre_gather={pre}")
+            emit(f"eval_step/{model}/{impl}", us_eval, f"cap_L={cap_l}")
+            entries[f"train_step/{model}/{impl}"] = {
+                "us_per_call": round(us_train, 1),
+                "eval_us_per_call": round(us_eval, 1),
+                "cap_L": cap_l, "feat_dim": int(g.feat_dim),
+                "pre_gather_in_jaxpr": pre,
+            }
+    write_bench_json(entries)
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    main(full=args.full)

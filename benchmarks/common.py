@@ -66,3 +66,29 @@ def timer_us(fn, *args, warmup=1, iters=3) -> float:
 
 def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
+
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_kernels.json")
+
+
+def write_bench_json(entries: dict) -> None:
+    """Merge `entries` into BENCH_kernels.json at the repo root — the
+    machine-readable kernel-perf trajectory future PRs diff against.
+    Existing keys from other bench drivers are preserved."""
+    import json
+
+    import jax
+    data = {}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            data = json.load(f)
+    data.update(entries)
+    data["_meta"] = {"backend": jax.default_backend(),
+                     "jax": jax.__version__,
+                     "note": "off-TPU, pallas runs in interpret mode: "
+                             "us timings there are shape-validation only; "
+                             "compare the analytic hbm_bytes"}
+    with open(BENCH_JSON, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")

@@ -1,28 +1,65 @@
 """Kernel microbenchmarks. On this CPU container Pallas executes in
 interpret mode, so the us_per_call column is SHAPE-VALIDATION only; the
-`derived` column carries the analytic FLOPs/bytes used by the roofline."""
+`derived` column carries the analytic FLOPs/bytes used by the roofline.
+Results also land in BENCH_kernels.json at the repo root (see
+`common.write_bench_json`) so the perf trajectory is machine-readable.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timer_us
-from repro.kernels.gather_mean.ref import gather_mean_ref
+from benchmarks.common import emit, timer_us, write_bench_json
+from repro.kernels.gather_agg.ops import gather_agg
+from repro.kernels.gather_agg.ref import gather_agg_ref
 from repro.models.lm.attention import flash_attention
 from repro.models.lm.rwkv6 import wkv6_chunked
 
 
+def gather_agg_hbm_bytes(D: int, r: int, F: int, fused: bool) -> int:
+    """Analytic HBM traffic of one aggregation (f32). The jnp/XLA path
+    materializes the (D, r, F) gathered intermediate (write + re-read for
+    the reduce); the fused kernel streams gathered rows straight into the
+    revisited (bd, F) output tile."""
+    gather_read = D * r * F * 4
+    out_write = D * F * 4
+    idx_w = D * r * (4 + 4)
+    if fused:
+        return gather_read + out_write + idx_w
+    intermediate = 2 * D * r * F * 4            # write + re-read
+    return gather_read + intermediate + out_write + idx_w
+
+
 def main(full: bool = False):
     key = jax.random.key(0)
+    entries = {}
 
-    # gather_mean (jnp ref path — the Pallas twin is interpret-only here)
-    x = jax.random.normal(key, (4096, 128))
-    idx = jax.random.randint(jax.random.key(1), (1024, 10), 0, 4096)
-    mask = jnp.ones((1024, 10), bool)
-    f = jax.jit(gather_mean_ref)
-    us = timer_us(f, x, idx, mask)
-    emit("kernel/gather_mean/1024x10x128", us,
-         f"bytes={1024 * 10 * 128 * 4}")
+    # fused gather-aggregate vs jnp reference (the GNN aggregation hot loop)
+    D, r, F, N = 1024, 10, 128, 4096
+    x = jax.random.normal(key, (N, F))
+    idx = jax.random.randint(jax.random.key(1), (D, r), 0, N)
+    w = jax.random.normal(jax.random.key(12), (D, r))
+    f_ref = jax.jit(gather_agg_ref)
+    us_ref = timer_us(f_ref, x, idx, w)
+    f_pal = jax.jit(lambda x, idx, w: gather_agg(x, idx, w, impl="pallas"))
+    us_pal = timer_us(f_pal, x, idx, w)
+    for name, us, fused in [("jnp", us_ref, False), ("pallas", us_pal, True)]:
+        b = gather_agg_hbm_bytes(D, r, F, fused)
+        emit(f"kernel/gather_agg/{name}/1024x10x128", us, f"hbm_bytes={b}")
+        entries[f"gather_agg/{name}/1024x10x128"] = {
+            "us_per_call": round(us, 1), "hbm_bytes": b,
+            "shape": {"n_dst": D, "fanout": r, "feat": F, "n_src": N}}
+    # structural regression guard (what the analytic model claims, checked
+    # against the actual lowering): the jnp path materializes the
+    # (D, r, F) gathered edge tensor, the fused path must never
+    edge_tensor = f"f32[{D},{r},{F}]"
+    jx_ref = str(jax.make_jaxpr(gather_agg_ref)(x, idx, w))
+    jx_pal = str(jax.make_jaxpr(
+        lambda x, idx, w: gather_agg(x, idx, w, impl="pallas"))(x, idx, w))
+    entries["gather_agg/ref_materializes_edge_tensor"] = edge_tensor in jx_ref
+    entries["gather_agg/fused_avoids_edge_tensor"] = \
+        edge_tensor not in jx_pal
+    assert entries["gather_agg/fused_avoids_edge_tensor"]
 
     # flash attention fwd+bwd
     q = jax.random.normal(jax.random.key(2), (1, 1024, 4, 64), jnp.bfloat16)
@@ -33,29 +70,37 @@ def main(full: bool = False):
     us = timer_us(g, q, k, v)
     flops = 4 * 1024 * 1024 * 4 * 64 * 2   # fwd+bwd qk+pv per head
     emit("kernel/flash_attention/1k_seq", us, f"flops={flops}")
+    entries["flash_attention/1k_seq"] = {"us_per_call": round(us, 1),
+                                         "flops": flops}
 
     # rwkv6 chunked
-    B, T, H, N = 1, 1024, 8, 64
-    r = jax.random.normal(jax.random.key(5), (B, T, H, N))
-    kk = jax.random.normal(jax.random.key(6), (B, T, H, N))
-    vv = jax.random.normal(jax.random.key(7), (B, T, H, N))
+    B, T, H, Nn = 1, 1024, 8, 64
+    r_ = jax.random.normal(jax.random.key(5), (B, T, H, Nn))
+    kk = jax.random.normal(jax.random.key(6), (B, T, H, Nn))
+    vv = jax.random.normal(jax.random.key(7), (B, T, H, Nn))
     lw = jnp.clip(-jnp.exp(jax.random.normal(jax.random.key(8),
-                                             (B, T, H, N))), -5, -1e-4)
-    u = jax.random.normal(jax.random.key(9), (H, N)) * 0.1
-    s0 = jnp.zeros((B, H, N, N))
+                                             (B, T, H, Nn))), -5, -1e-4)
+    u = jax.random.normal(jax.random.key(9), (H, Nn)) * 0.1
+    s0 = jnp.zeros((B, H, Nn, Nn))
     f = jax.jit(lambda *a: wkv6_chunked(*a)[0])
-    us = timer_us(f, r, kk, vv, lw, u, s0)
-    emit("kernel/rwkv6_chunked/1k_seq", us,
-         f"flops~={T * H * (16 * 16 * N * 2 + 2 * N * N * 2)}")
+    us = timer_us(f, r_, kk, vv, lw, u, s0)
+    rk_flops = T * H * (16 * 16 * Nn * 2 + 2 * Nn * Nn * 2)
+    emit("kernel/rwkv6_chunked/1k_seq", us, f"flops~={rk_flops}")
+    entries["rwkv6_chunked/1k_seq"] = {"us_per_call": round(us, 1),
+                                       "flops": rk_flops}
 
     # moe grouped matmul (ref einsum)
     from repro.kernels.moe_gmm.ref import moe_gmm_ref
     xg = jax.random.normal(jax.random.key(10), (8, 256, 256), jnp.bfloat16)
-    w = jax.random.normal(jax.random.key(11), (8, 256, 512), jnp.bfloat16)
+    wg = jax.random.normal(jax.random.key(11), (8, 256, 512), jnp.bfloat16)
     f = jax.jit(moe_gmm_ref)
-    us = timer_us(f, xg, w)
-    emit("kernel/moe_gmm/8x256x256x512", us,
-         f"flops={2 * 8 * 256 * 256 * 512}")
+    us = timer_us(f, xg, wg)
+    gmm_flops = 2 * 8 * 256 * 256 * 512
+    emit("kernel/moe_gmm/8x256x256x512", us, f"flops={gmm_flops}")
+    entries["moe_gmm/8x256x256x512"] = {"us_per_call": round(us, 1),
+                                        "flops": gmm_flops}
+
+    write_bench_json(entries)
 
 
 if __name__ == "__main__":

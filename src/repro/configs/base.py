@@ -171,6 +171,10 @@ class GNNConfig:
     gat_heads: int = 4
     dropout: float = 0.5
     dtype: str = "float32"
+    # aggregation backend: "auto" picks the fused repro.kernels.gather_agg
+    # Pallas kernel on TPU and the jnp reference elsewhere; "pallas" forces
+    # the kernel (interpret-mode simulator off-TPU — validation only)
+    agg_impl: str = "auto"           # auto | jnp | pallas
 
 
 # ---------------------------------------------------------------------------

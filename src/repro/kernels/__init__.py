@@ -1,3 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the compute hot spots, each shipped as a
+`kernel.py` (the Pallas implementation) + `ops.py` (jit-able public wrapper
+with backend/interpret dispatch and, where training needs it, a custom VJP)
++ `ref.py` (pure-jnp oracle the tests compare against).
+
+- `gather_agg`    — fused gather + per-edge-weighted reduce, the GNN
+                    aggregation hot loop (forward AND backward avoid the
+                    (n_dst, fanout, F) intermediate). See README §kernels.
+- `gather_mean`   — DEPRECATED shim over `gather_agg` (masked mean).
+- `flash_attention`, `moe_gmm`, `rwkv6_chunk` — LM-side kernels.
+"""

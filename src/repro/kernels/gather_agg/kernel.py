@@ -1,0 +1,176 @@
+"""Pallas TPU kernels: fused gather + per-edge-weighted reduce, and its
+backward pair (scatter-add into dx, per-edge row dots for dw).
+
+This is the GNN aggregation hot spot the paper's working-set argument is
+about: for each destination node, gather its `r` sampled neighbors' feature
+rows from HBM and reduce them under per-edge weights
+
+    out[i] = sum_j w[i, j] * x[idx[i, j]]
+
+One kernel therefore lowers SAGE's masked mean (w = mask / count), GCN's
+symmetric-normalized weighted sum (w folds the degree normalizers), and
+GAT's alpha-weighted value reduction (w = attention weights) — the weights
+are always computed OUTSIDE the kernel, on (n_dst, r) scalars, so nothing
+(n_dst, r, F)-shaped ever touches HBM.
+
+Forward grid: (n_dst / bd, bd, r) — destination rows are tiled in blocks of
+`bd` (the f32 sublane width by default), so each output tile is written back
+to HBM once per bd*r steps instead of once per r steps as in the old 1-row
+`gather_mean` grid. Neighbor indices and weights arrive through *scalar
+prefetch* so the x BlockSpec index_map streams exactly the needed rows
+HBM->VMEM, double-buffered by the pipeline.
+
+Backward dx grid: one step per edge, with edges PRE-SORTED by source row
+(a cheap (n_dst*r,) argsort outside the kernel). Sorting makes the output
+index map non-decreasing, so every revisit of a dx row is consecutive — the
+only accumulation pattern Pallas guarantees (a block stays resident in VMEM
+while its index repeats, and is written back exactly once when it changes).
+Rows that receive no edge keep the zeros of the aliased input buffer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# forward: out[i] = sum_j w[i, j] * x[idx[i, j]]
+# ---------------------------------------------------------------------------
+def _fwd_kernel(idx_ref, w_ref, x_ref, o_ref, *, bd: int):
+    del idx_ref  # consumed by the BlockSpec index maps
+    i, ii, j = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    @pl.when((ii == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[i * bd + ii, j]
+    row = o_ref[pl.ds(ii, 1), :]
+    o_ref[pl.ds(ii, 1), :] = row + x_ref[...].astype(jnp.float32) * w
+
+
+def gather_agg_fwd_pallas(x, idx, w, *, block_dst: int = 8,
+                          interpret: bool = False):
+    """x: (n_src, F); idx: (n_dst, r) int32 in [0, n_src); w: (n_dst, r)
+    float32. Returns (n_dst, F) float32. F should be a multiple of 128 on
+    real TPUs (lane width); interpret mode accepts any F."""
+    D, r = idx.shape
+    F = x.shape[1]
+    bd = max(1, min(block_dst, D))
+    Dp = ((D + bd - 1) // bd) * bd
+    if Dp != D:                      # padded rows gather row 0 with weight 0
+        idx = jnp.pad(idx, ((0, Dp - D), (0, 0)))
+        w = jnp.pad(w, ((0, Dp - D), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, bd=bd),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(Dp // bd, bd, r),
+            in_specs=[
+                pl.BlockSpec((1, F), lambda i, ii, j, idx_ref, w_ref:
+                             (idx_ref[i * bd + ii, j], 0)),
+            ],
+            out_specs=pl.BlockSpec((bd, F), lambda i, ii, j, idx_ref, w_ref:
+                                   (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((Dp, F), jnp.float32),
+        interpret=interpret,
+    )(idx, w, x)
+    return out[:D] if Dp != D else out
+
+
+# ---------------------------------------------------------------------------
+# backward dx: dx[idx[i, j]] += w[i, j] * g[i]  (edges sorted by src row)
+# ---------------------------------------------------------------------------
+def _bwd_dx_kernel(src_ref, dst_ref, w_ref, g_ref, dx0_ref, o_ref):
+    del dst_ref, dx0_ref
+    e = pl.program_id(0)
+    new_run = (e == 0) | (src_ref[e] != src_ref[jnp.maximum(e - 1, 0)])
+
+    @pl.when(new_run)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += g_ref[...].astype(jnp.float32) * w_ref[e]
+
+
+def gather_agg_bwd_dx_pallas(idx, w, g, n_src: int, *,
+                             interpret: bool = False):
+    """Scatter-add cotangents back to the gathered rows.
+
+    idx/w: (n_dst, r); g: (n_dst, F) cotangent. Returns (n_src, F) float32.
+    The edge list is sorted by source row outside the kernel so accumulation
+    runs are consecutive (see module docstring)."""
+    D, r = idx.shape
+    F = g.shape[1]
+    E = D * r
+    flat = idx.reshape(-1)
+    order = jnp.argsort(flat).astype(jnp.int32)
+    src_sorted = flat[order].astype(jnp.int32)
+    dst_sorted = (order // r).astype(jnp.int32)
+    w_sorted = w.reshape(-1)[order].astype(jnp.float32)
+    dx0 = jnp.zeros((n_src, F), jnp.float32)
+    return pl.pallas_call(
+        _bwd_dx_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(E,),
+            in_specs=[
+                pl.BlockSpec((1, F), lambda e, s, d, w: (d[e], 0)),
+                pl.BlockSpec((1, F), lambda e, s, d, w: (s[e], 0)),
+            ],
+            out_specs=pl.BlockSpec((1, F), lambda e, s, d, w: (s[e], 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_src, F), jnp.float32),
+        input_output_aliases={4: 0},     # untouched rows keep dx0's zeros
+        interpret=interpret,
+    )(src_sorted, dst_sorted, w_sorted, g, dx0)
+
+
+# ---------------------------------------------------------------------------
+# backward dw: dw[i, j] = <g[i], x[idx[i, j]]>
+# ---------------------------------------------------------------------------
+def _bwd_dw_kernel(idx_ref, x_ref, g_ref, o_ref):
+    del idx_ref
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    dot = jnp.sum(x_ref[...].astype(jnp.float32) *
+                  g_ref[...].astype(jnp.float32))
+    lane = jax.lax.broadcasted_iota(jnp.int32, o_ref.shape, 1)
+    o_ref[...] += jnp.where(lane == j, dot, 0.0)
+
+
+def gather_agg_bwd_dw_pallas(x, idx, g, *, interpret: bool = False):
+    """Per-edge weight cotangents (needed when w carries gradient, e.g. GAT
+    attention): fused gather + row dot. The (D, r) output is padded to the
+    128-lane width and written as one revisited (1, lanes) row tile per dst
+    (fanout is the inner, consecutive grid axis), keeping the store aligned
+    with TPU tiling. Dead-code-eliminated by XLA when dw is unused
+    (SAGE/GCN)."""
+    D, r = idx.shape
+    F = x.shape[1]
+    rp = ((r + 127) // 128) * 128
+    out = pl.pallas_call(
+        _bwd_dw_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(D, r),
+            in_specs=[
+                pl.BlockSpec((1, F), lambda i, j, idx_ref:
+                             (idx_ref[i, j], 0)),
+                pl.BlockSpec((1, F), lambda i, j, idx_ref: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, rp), lambda i, j, idx_ref: (i, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((D, rp), jnp.float32),
+        interpret=interpret,
+    )(idx, x, g)
+    return out[:, :r] if rp != r else out

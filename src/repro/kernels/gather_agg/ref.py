@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused gather-aggregate kernel.
+
+`gather_agg_ref` is also the production `agg_impl="jnp"` path: XLA fuses the
+gather with the weighted reduce reasonably well on CPU/GPU, but it still
+materializes the (n_dst, fanout, F) intermediate the Pallas kernel avoids.
+"""
+import jax.numpy as jnp
+
+
+def gather_agg_ref(x, idx, w):
+    """out[i] = sum_j w[i, j] * x[idx[i, j]].
+
+    x: (n_src, F) float; idx: (n_dst, r) int (clipped to valid rows);
+    w: (n_dst, r) float per-edge weights (0 for masked slots).
+    Returns (n_dst, F) float32.
+    """
+    g = x[jnp.clip(idx, 0, x.shape[0] - 1)].astype(jnp.float32)
+    return (g * w.astype(jnp.float32)[..., None]).sum(axis=1)

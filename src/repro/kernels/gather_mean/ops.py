@@ -1,18 +1,28 @@
-"""jit'd public wrapper: Pallas on TPU, interpret-mode kernel on CPU."""
+"""DEPRECATED import location — `gather_mean` is now a thin shim over the
+generalized `repro.kernels.gather_agg` fused kernel (masked mean == weighted
+sum with w = mask / count, counts precomputed OUTSIDE the kernel — which
+also retires the old kernel's O(fanout^2) unrolled `_finish` re-count).
+Kept for existing callers, mirroring the `CommRandPolicy` shim in
+`repro.configs.base`; new code should call `gather_agg` directly.
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.gather_mean.kernel import gather_mean_pallas
+from repro.kernels.gather_agg.ops import gather_agg
 from repro.kernels.gather_mean.ref import gather_mean_ref
 
 
 @functools.partial(jax.jit, static_argnames=("use_kernel",))
 def gather_mean(x, idx, mask, use_kernel: bool = True):
+    """x: (N, F) float32; idx: (D, r) int32 (rows of x); mask: (D, r) bool.
+
+    Returns (D, F) float32 masked means (all-masked rows are zero)."""
     if not use_kernel:
         return gather_mean_ref(x, idx, mask)
-    interpret = jax.default_backend() != "tpu"
-    return gather_mean_pallas(x, idx.astype("int32"), mask.astype("int32"),
-                              interpret=interpret)
+    m = mask.astype(jnp.float32)
+    w = m / jnp.maximum(m.sum(axis=1, keepdims=True), 1.0)
+    return gather_agg(x, idx, w, impl="pallas")

@@ -2,8 +2,20 @@
 primary), GCN and GAT (paper §6.4).
 
 All layers consume a `Block` (dense (n_dst, fanout) source-position gather +
-self position), so aggregation is a masked mean/attention over the fanout
-axis — the shape the `gather_mean` Pallas kernel targets.
+self position), so aggregation is a per-edge-weighted reduce over the fanout
+axis — exactly the shape of the fused `repro.kernels.gather_agg` Pallas
+kernel. Every layer expresses its aggregation as scalar per-edge weights
+(SAGE: mask/count, GCN: folded degree normalizers, GAT: attention alphas)
+over one shared `gather_agg` call, so the (n_dst, fanout, F) gathered
+intermediate never materializes in HBM on the kernel path — forward or
+backward. `GNNConfig.agg_impl` selects the backend (see
+`repro.kernels.gather_agg.ops.resolve_agg_impl`).
+
+`apply_gnn(..., feats_global=True)` additionally composes layer-0 source
+positions with `batch.node_ids`, gathering input features straight from the
+global (N, F) feature matrix — the per-batch HBM feature traffic is then
+exactly the paper's Fig-6 working-set metric, with no up-front (cap_L, F)
+copy.
 """
 from __future__ import annotations
 
@@ -13,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import GNNConfig
-from repro.core.minibatch import Block, MiniBatch
+from repro.core.minibatch import MiniBatch
+from repro.kernels.gather_agg.ops import gather_agg, resolve_agg_impl
 from repro.models.lm.common import dense_init
 
 Params = Dict
@@ -58,57 +71,73 @@ def init_gnn(cfg: GNNConfig, key) -> Params:
 
 
 # ---------------------------------------------------------------------------
-# layers
+# layers — each one reduces to gather_agg(x_tab, src_idx, per-edge weights).
+# `x_tab` is the source feature table: the previous level's activations, or
+# the GLOBAL feature matrix at layer 0 under feats_global (src_idx then
+# holds composed global row ids).
 # ---------------------------------------------------------------------------
-def _masked_mean(x_src, block: Block):
-    """x_src: (n_src, D) -> (n_dst, D) mean over sampled neighbor slots."""
-    g = x_src[block.src_pos]                          # (n_dst, r, D)
-    m = block.edge_mask[..., None].astype(x_src.dtype)
-    s = (g * m).sum(axis=1)
-    cnt = jnp.maximum(m.sum(axis=1), 1.0)
-    return s / cnt
+def _masked_mean(x_tab, src_idx, edge_mask, impl: str = "jnp"):
+    """(n_dst, r)-indexed mean over valid neighbor slots -> (n_dst, F)."""
+    m = edge_mask.astype(jnp.float32)
+    w = m / jnp.maximum(m.sum(axis=1, keepdims=True), 1.0)
+    return gather_agg(x_tab, src_idx, w, impl=impl).astype(x_tab.dtype)
 
 
-def sage_layer(p, x_src, block: Block):
-    h_self = x_src[block.self_pos]
-    h_nbr = _masked_mean(x_src, block)
+def sage_layer(p, x_tab, src_idx, self_idx, edge_mask, *, impl="jnp"):
+    h_self = x_tab[self_idx]
+    h_nbr = _masked_mean(x_tab, src_idx, edge_mask, impl)
     return h_self @ p["w_self"] + h_nbr @ p["w_neigh"] + p["b"]
 
 
-def gcn_layer(p, x_src, block: Block, deg_src, deg_dst):
-    """Symmetric-normalized aggregation with self loops (global degrees)."""
-    g = x_src[block.src_pos]                          # (n_dst, r, D)
-    m = block.edge_mask[..., None].astype(x_src.dtype)
-    cnt = jnp.maximum(block.edge_mask.sum(axis=1, keepdims=True), 1)
-    # sampled-edge weight: deg_dst/r compensates fanout subsampling
-    c_src = jax.lax.rsqrt(deg_src[block.src_pos].astype(jnp.float32) + 1.0)
+def gcn_layer(p, x_tab, src_idx, self_idx, edge_mask, deg_src_edge, deg_dst,
+              *, impl="jnp"):
+    """Symmetric-normalized aggregation with self loops (global degrees).
+
+    All normalizers fold into the per-edge weight: mask * rsqrt(deg_src+1)
+    * (deg_dst / sampled_count)  * rsqrt(deg_dst+1) — deg_dst/count
+    compensates fanout subsampling."""
+    m = edge_mask.astype(jnp.float32)
+    cnt = jnp.maximum(edge_mask.sum(axis=1, keepdims=True), 1)
+    c_src = jax.lax.rsqrt(deg_src_edge.astype(jnp.float32) + 1.0)
     c_dst = jax.lax.rsqrt(deg_dst.astype(jnp.float32) + 1.0)
-    w = (c_src * (deg_dst[:, None] / cnt)
-         )[..., None].astype(x_src.dtype)
-    agg = (g * m * w).sum(axis=1)
-    h_self = x_src[block.self_pos] * (c_dst * c_dst)[:, None].astype(
-        x_src.dtype)
-    return (agg * c_dst[:, None].astype(x_src.dtype) + h_self) @ p["w"] \
-        + p["b"]
+    w = m * c_src * (deg_dst[:, None] / cnt) * c_dst[:, None]
+    agg = gather_agg(x_tab, src_idx, w, impl=impl).astype(x_tab.dtype)
+    h_self = x_tab[self_idx] * (c_dst * c_dst)[:, None].astype(x_tab.dtype)
+    return (agg + h_self) @ p["w"] + p["b"]
 
 
-def gat_layer(p, x_src, block: Block):
+def gat_layer(p, x_tab, src_idx, self_idx, edge_mask, *, impl="jnp"):
     H, dh = p["a_src"].shape
-    z = x_src @ p["w"]                                # (n_src, H*dh)
-    z = z.reshape(z.shape[0], H, dh)
-    z_nbr = z[block.src_pos]                          # (n_dst, r, H, dh)
-    z_self = z[block.self_pos]                        # (n_dst, H, dh)
-    e_src = jnp.einsum("nrhd,hd->nrh", z_nbr, p["a_src"])
+    n_dst, r = src_idx.shape
+    z = (x_tab @ p["w"]).reshape(-1, H, dh)           # (n_src, H, dh)
+    # per-SOURCE attention logits: scores are linear in z, so gather the
+    # (n_src, H) scalars instead of (n_dst, r, H, dh) projected rows
+    s_src = jnp.einsum("nhd,hd->nh", z, p["a_src"])
+    z_self = z[self_idx]                              # (n_dst, H, dh)
+    e_src = s_src[src_idx]                            # (n_dst, r, H)
     e_dst = jnp.einsum("nhd,hd->nh", z_self, p["a_dst"])
     e_self = jnp.einsum("nhd,hd->nh", z_self, p["a_src"]) + e_dst
     e = jax.nn.leaky_relu(e_src + e_dst[:, None], 0.2)  # (n_dst, r, H)
-    e = jnp.where(block.edge_mask[..., None], e, -1e30)
+    e = jnp.where(edge_mask[..., None], e, -1e30)
     e_all = jnp.concatenate(
-        [e, jax.nn.leaky_relu(e_self)[:, None]], axis=1)  # + self edge
-    alpha = jax.nn.softmax(e_all, axis=1)
-    vals = jnp.concatenate([z_nbr, z_self[:, None]], axis=1)
-    out = jnp.einsum("nrh,nrhd->nhd", alpha, vals).reshape(
-        z_self.shape[0], H * dh) + p["b"]
+        [e, jax.nn.leaky_relu(e_self, 0.2)[:, None]], axis=1)  # + self edge
+    alpha = jax.nn.softmax(e_all, axis=1)             # (n_dst, r+1, H)
+    a_nbr, a_self = alpha[:, :r], alpha[:, r]
+    if impl == "pallas":
+        # fold heads into the row axis: row (s*H + h) of zf is head h of
+        # source s, so one gather_agg call reduces all heads, with alpha
+        # flowing through the kernel's dw path for attention gradients
+        zf = z.reshape(-1, dh)
+        idx2 = (src_idx[:, None, :] * H +
+                jnp.arange(H, dtype=src_idx.dtype)[None, :, None])
+        w2 = a_nbr.transpose(0, 2, 1)                 # (n_dst, H, r)
+        out = gather_agg(zf, idx2.reshape(n_dst * H, r),
+                         w2.reshape(n_dst * H, r), impl=impl)
+        out = out.reshape(n_dst, H, dh)
+    else:
+        out = jnp.einsum("nrh,nrhd->nhd", a_nbr, z[src_idx])
+    out = out + a_self[..., None] * z_self
+    out = out.reshape(n_dst, H * dh) + p["b"]
     if p.get("w_out") is not None:
         out = out @ p["w_out"]
     return out
@@ -118,24 +147,52 @@ def gat_layer(p, x_src, block: Block):
 # full model over a batch tower
 # ---------------------------------------------------------------------------
 def apply_gnn(cfg: GNNConfig, params: Params, batch: MiniBatch, x,
-              degrees=None, *, train: bool = False, dropout_key=None):
-    """x: (cap_L, in_dim) gathered input features (masked). Returns logits
-    aligned with batch.roots order."""
-    x = x * batch.node_mask[:, None].astype(x.dtype)
+              degrees=None, *, train: bool = False, dropout_key=None,
+              feats_global: bool = False):
+    """Returns logits aligned with batch.roots order.
+
+    x: the input features. With feats_global=False (legacy), x is the
+    pre-gathered (cap_L, in_dim) input-level table (callers do
+    `feats[batch.node_ids]` — e.g. the sharded halo-gather path). With
+    feats_global=True, x is the FULL (N, in_dim) feature matrix and layer 0
+    gathers rows directly through composed `node_ids[src_pos]` indices — no
+    (cap_L, in_dim) copy is ever made, so per-batch feature HBM reads equal
+    the Fig-6 working-set bytes.
+    """
+    impl = resolve_agg_impl(cfg.agg_impl)
     L = len(batch.blocks)
+    if not feats_global:
+        x = x * batch.node_mask[:, None].astype(x.dtype)
+    elif cfg.model == "gat":
+        # GAT projects every unique source row BEFORE gathering (projecting
+        # per edge would multiply the matmul FLOPs by the fanout), so the
+        # input level is materialized once here; the per-edge (r, H*dh)
+        # intermediates are still never built on the kernel path.
+        x = x[jnp.minimum(batch.node_ids, x.shape[0] - 1)] \
+            * batch.node_mask[:, None].astype(x.dtype)
+        feats_global = False
     for i, block in enumerate(batch.blocks):
         p = params["layers"][i]
+        if i == 0 and feats_global:
+            gid = jnp.minimum(batch.node_ids, x.shape[0] - 1)
+            src_idx = gid[block.src_pos]
+            self_idx = gid[block.self_pos]
+        else:
+            src_idx, self_idx = block.src_pos, block.self_pos
         if cfg.model == "sage":
-            x = sage_layer(p, x, block)
+            x = sage_layer(p, x, src_idx, self_idx, block.edge_mask,
+                           impl=impl)
         elif cfg.model == "gcn":
             # per-level degrees gathered from the global degree array;
             # blocks[i] maps level (L-i) -> (L-i-1)
             n = degrees.shape[0]
             d_src = degrees[jnp.minimum(batch.levels[L - i], n - 1)]
-            d_dst = degrees[jnp.minimum(batch.levels[L - i - 1], n - 1)]
-            x = gcn_layer(p, x, block, d_src, d_dst)
+            deg_dst = degrees[jnp.minimum(batch.levels[L - i - 1], n - 1)]
+            x = gcn_layer(p, x, src_idx, self_idx, block.edge_mask,
+                          d_src[block.src_pos], deg_dst, impl=impl)
         else:
-            x = gat_layer(p, x, block)
+            x = gat_layer(p, x, src_idx, self_idx, block.edge_mask,
+                          impl=impl)
         x = x * block.dst_mask[:, None].astype(x.dtype)
         if i < len(batch.blocks) - 1:
             x = jax.nn.relu(x)

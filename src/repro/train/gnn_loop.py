@@ -64,9 +64,10 @@ def _make_steps(cfg: GNNConfig, tcfg: TrainConfig, caps, fanouts):
     def train_step(params, opt_state, batch: mb.MiniBatch, feats, degrees,
                    lr, key):
         def loss_fn(p):
-            x = feats[jnp.minimum(batch.node_ids, feats.shape[0] - 1)]
-            logits = apply_gnn(cfg, p, batch, x, degrees, train=True,
-                               dropout_key=key)
+            # no (cap_L, F) pre-gather: layer 0 reads feature rows straight
+            # from the global matrix through the fused gather-agg path
+            logits = apply_gnn(cfg, p, batch, feats, degrees, train=True,
+                               dropout_key=key, feats_global=True)
             return gnn_softmax_ce(logits, batch.labels,
                                   batch.label_mask.astype(jnp.float32))
 
@@ -78,8 +79,8 @@ def _make_steps(cfg: GNNConfig, tcfg: TrainConfig, caps, fanouts):
 
     @jax.jit
     def eval_step(params, batch: mb.MiniBatch, feats, degrees):
-        x = feats[jnp.minimum(batch.node_ids, feats.shape[0] - 1)]
-        logits = apply_gnn(cfg, params, batch, x, degrees, train=False)
+        logits = apply_gnn(cfg, params, batch, feats, degrees, train=False,
+                           feats_global=True)
         m = batch.label_mask.astype(jnp.float32)
         return (gnn_softmax_ce(logits, batch.labels, m),
                 accuracy(logits, batch.labels, m), m.sum())
