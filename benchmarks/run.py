@@ -24,15 +24,15 @@ def main() -> None:
                             fig6_footprint, fig7_label_diversity,
                             fig8_trainset_size, fig9_cachesim,
                             fig10_cache_capacity, kernels_bench,
-                            table3_fixed_budget, table4_prior_work,
-                            table5_models)
+                            sampler_bench, table3_fixed_budget,
+                            table4_prior_work, table5_models)
     mods = [
         ("fig5", fig5_knob_sweep), ("fig6", fig6_footprint),
         ("fig7", fig7_label_diversity), ("table3", table3_fixed_budget),
         ("table4", table4_prior_work), ("fig8", fig8_trainset_size),
         ("fig9", fig9_cachesim), ("fig10", fig10_cache_capacity),
         ("table5", table5_models), ("kernels", kernels_bench),
-        ("train_step", bench_train_step),
+        ("train_step", bench_train_step), ("samplers", sampler_bench),
     ]
     print("name,us_per_call,derived")
     failures = 0

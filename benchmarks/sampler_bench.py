@@ -1,0 +1,90 @@
+"""Sampler sweep: per-sampler batch-build timing + mean unique-node
+footprint on reddit-like, merged into the machine-readable bench artifact
+(`BENCH_kernels.json`) alongside the kernel entries.
+
+Also times the vectorized `graphs.csr.reorder` in the real preprocessing
+path (community permutation of the full edge array) — the old per-node
+Python loop was the preprocessing bottleneck on big graphs.
+
+The sweep doubles as the §6.3 acceptance evidence: the device-side LABOR
+sampler's mean footprint must land strictly below uniform/rand's at equal
+fanout, with zero community information.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset, emit, timer_us, write_bench_json
+from repro import sampling
+from repro.core import minibatch as mb
+from repro.core.reorder import community_permutation
+from repro.graphs import synthetic
+from repro.graphs.csr import DeviceGraph, reorder
+
+GRAPH = "reddit-like"
+BATCH = 512
+FANOUTS = (10, 10)
+SWEEP = (("biased", {"p": 0.5}), ("biased", {"p": 1.0}), ("uniform", {}),
+         ("labor", {}), ("full", {}))
+
+
+def _bench_reorder(entries):
+    g_raw = synthetic.load(GRAPH)           # unprepared: random node order
+    perm = community_permutation(g_raw.communities, g_raw.degrees())
+    t0 = time.perf_counter()
+    reorder(g_raw, perm)
+    us = (time.perf_counter() - t0) * 1e6
+    emit(f"preprocess/reorder/{GRAPH}", us, f"edges={g_raw.num_edges}")
+    entries[f"preprocess/reorder/{GRAPH}"] = {
+        "us": us, "edges": int(g_raw.num_edges),
+        "impl": "vectorized argsort/gather"}
+
+
+def main(full: bool = False):
+    g = dataset(GRAPH)
+    gd = DeviceGraph.from_graph(g)
+    labels = jnp.asarray(g.labels)
+    caps = (8192, g.num_nodes + 128)        # generous: no dedup truncation
+    rng = np.random.default_rng(0)
+    n_batches = 6 if full else 3
+    batches = [np.sort(rng.choice(g.train_ids, BATCH, replace=False))
+               for _ in range(n_batches)]
+    epoch_key = jax.random.key(0)
+
+    entries = {}
+    foot = {}
+    for name, kw in SWEEP:
+        s = sampling.make_sampler(name, **kw)
+        fanouts = FANOUTS      # "full" at the same fanout: first-k truncation
+
+        def build(j):
+            return mb.build_batch(
+                jax.random.fold_in(epoch_key, j), gd,
+                jnp.asarray(batches[j], jnp.int32), labels, fanouts, caps,
+                s, epoch_key=epoch_key)
+
+        us = timer_us(build, 0, warmup=1, iters=3)
+        uniq = float(np.mean([int(build(j).num_unique)
+                              for j in range(n_batches)]))
+        foot[s.describe()] = uniq
+        emit(f"sampler_sweep/{GRAPH}/{s.describe()}", us,
+             f"mean_unique_nodes={uniq:.0f}")
+        entries[f"sampler_sweep/{s.describe()}"] = {
+            "build_us": us, "mean_unique_nodes": uniq, "graph": GRAPH,
+            "batch": BATCH, "fanouts": list(fanouts)}
+
+    # §6.3 acceptance: shared-randomness LABOR beats independent sampling
+    # on footprint at equal fanout, without community info
+    assert foot["labor(shared-hash-topk)"] < foot["uniform"], foot
+    assert foot["labor(shared-hash-topk)"] < foot["biased-two-phase(p=0.5)"]
+
+    _bench_reorder(entries)
+    write_bench_json(entries)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,10 @@ API).
 
 Submodules: `policy` (BatchPolicy protocol + registry), `order` (the one
 block-shuffle operator), `calibrate` (cached cap calibration), `stream`
-(resumable prefetching `BatchStream` / `eval_batches`).
+(resumable prefetching `BatchStream` / `eval_batches`). Neighbor
+selection is the sibling `repro.sampling` subsystem: each policy binds a
+sampler via `sampler_spec()` and the stream threads it — as a static jit
+argument — into the compiled batch builder.
 
 `policy` and `order` are numpy-only and import eagerly (configs depend on
 them); `stream`/`calibrate` pull in jax + the device builder and load

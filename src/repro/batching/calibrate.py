@@ -18,6 +18,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro import sampling
 from repro.batching.policy import as_policy
 from repro.core import minibatch as mb
 from repro.graphs.csr import Graph
@@ -46,7 +47,9 @@ class CapsCalibrator:
 
     cache_path=None disables the disk cache (every call probes). The cache
     key covers the graph fingerprint, the policy description (root_mode /
-    mix / p), the batch size, the fanouts, and every probe parameter.
+    mix / p), the BOUND SAMPLER's description (the sampler is a static jit
+    argument, so caps are a per-sampler compile-time property), the batch
+    size, the fanouts, and every probe parameter.
     """
     cache_path: Optional[str] = None
     n_probe: int = 6
@@ -58,6 +61,7 @@ class CapsCalibrator:
         pol = as_policy(policy)
         return "|".join([
             graph_fingerprint(graph), type(pol).__name__, pol.describe(),
+            sampling.for_policy(pol).describe(),
             str(batch_size), ",".join(str(f) for f in fanouts),
             f"n{self.n_probe}", f"m{self.margin:g}", f"s{self.seed}",
             f"a{self.align}"])

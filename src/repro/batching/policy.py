@@ -10,10 +10,19 @@ through this interface; the policy names are the paper's knobs:
     norand      static community order (no shuffle)
     comm_rand   block shuffle with the MIX knob (paper §4.1)
     clustergcn  random unions of communities (prior work, §6.3)
-    labor       uniform order + shared-randomness sampling marker (§6.3)
+    labor       uniform order + LABOR shared-randomness sampling (§6.3)
 
 `CommRandPolicy` (previously in `configs.base`, which keeps a deprecation
 shim) is the registered implementation behind the first three names.
+
+A policy also decides HOW neighbors are drawn, via `sampler_spec()`: a
+plain `(name, kwargs)` pair into the `repro.sampling` registry (kept as
+data so this module stays numpy-only — `repro.sampling.for_policy`
+resolves it). The COMM-RAND family and ClusterGCN bind the biased
+two-phase sampler at their `p` (`repro.sampling.BiasedTwoPhaseSampler`,
+the old hardcoded `core.sampler` path); `labor` binds the device-side
+shared-randomness `LaborSampler`, which is what actually shrinks its
+footprint — the `p` knob is meaningless to it.
 """
 from __future__ import annotations
 
@@ -37,6 +46,11 @@ class BatchPolicy(Protocol):
     def epoch_order(self, train_ids: np.ndarray, communities: np.ndarray,
                     rng: np.random.Generator) -> np.ndarray:
         """A permutation of `train_ids` for one epoch."""
+        ...
+
+    def sampler_spec(self) -> Tuple[str, Dict]:
+        """(name, kwargs) into the `repro.sampling` registry: the neighbor
+        sampler this policy trains through."""
         ...
 
     def describe(self) -> str: ...
@@ -109,6 +123,9 @@ class CommRandPolicy:
             raise ValueError(self.root_mode)
         return order_mod.block_shuffle(groups, self.mix, rng)
 
+    def sampler_spec(self) -> Tuple[str, Dict]:
+        return ("biased", {"p": self.p})
+
     def describe(self) -> str:
         if self.root_mode == "rand":
             root = "RAND-ROOTS"
@@ -160,21 +177,41 @@ class ClusterGCNPolicy:
         return np.split(order, range(self.parts_per_batch, n_comm,
                                      self.parts_per_batch))
 
+    @staticmethod
+    def _grouped(ids: np.ndarray, comm_of_ids: np.ndarray, n_comm: int,
+                 unions: List[np.ndarray]) -> List[np.ndarray]:
+        """One bucketed pass: argsort `ids` by community once, then each
+        union is a concat of bucket slices (replacing the old O(C·N)
+        per-union `np.isin` scan). The position sort restores the original
+        `ids` order the masked implementation produced."""
+        by_comm = np.argsort(comm_of_ids, kind="stable")
+        bounds = np.zeros(n_comm + 1, np.int64)
+        np.add.at(bounds, comm_of_ids + 1, 1)
+        np.cumsum(bounds, out=bounds)
+        out = []
+        for union in unions:
+            pos = np.concatenate(
+                [by_comm[bounds[c]:bounds[c + 1]] for c in union]
+                or [np.zeros(0, np.int64)])
+            out.append(ids[np.sort(pos)])
+        return out
+
     def member_groups(self, communities: np.ndarray,
                       rng: np.random.Generator) -> List[np.ndarray]:
         """ALL node ids per community union (one epoch of subgraph batches)."""
-        return [np.where(np.isin(communities, g))[0]
-                for g in self.community_order(communities, rng)]
+        n_comm = int(communities.max()) + 1
+        return self._grouped(np.arange(len(communities)), communities,
+                             n_comm, self.community_order(communities, rng))
 
     def epoch_order(self, train_ids: np.ndarray, communities: np.ndarray,
                     rng: np.random.Generator) -> np.ndarray:
-        member = np.zeros(int(communities.max()) + 1, bool)
-        out = []
-        for g in self.community_order(communities, rng):
-            member[:] = False
-            member[g] = True
-            out.append(train_ids[member[communities[train_ids]]])
-        return np.concatenate(out)
+        n_comm = int(communities.max()) + 1
+        return np.concatenate(self._grouped(
+            train_ids, communities[train_ids], n_comm,
+            self.community_order(communities, rng)))
+
+    def sampler_spec(self) -> Tuple[str, Dict]:
+        return ("biased", {"p": self.p})
 
     def describe(self) -> str:
         # p is part of the description: CapsCalibrator keys its disk cache
@@ -187,9 +224,13 @@ class ClusterGCNPolicy:
 class LaborPolicy:
     """LABOR-lite [9]: structure-agnostic roots (uniform shuffle); the
     footprint reduction comes from shared per-node hash randomness during
-    neighbor sampling (`shared_randomness` marks that to consumers)."""
+    neighbor sampling — `sampler_spec()` binds the device-side
+    `repro.sampling.LaborSampler`, so `make_policy("labor")` trains
+    through the same jit-compiled pipeline as every other policy.
+
+    `p` exists only to satisfy the BatchPolicy protocol (uniform-eval
+    contract); the LABOR sampler ignores it."""
     p: float = 0.5
-    shared_randomness: bool = True
 
     @property
     def name(self) -> str:
@@ -199,8 +240,11 @@ class LaborPolicy:
                     rng: np.random.Generator) -> np.ndarray:
         return rng.permutation(train_ids)
 
+    def sampler_spec(self) -> Tuple[str, Dict]:
+        return ("labor", {})
+
     def describe(self) -> str:
-        return f"LABOR-lite p={self.p:g}"
+        return "LABOR-lite(shared-randomness)"
 
 
 # ---------------------------------------------------------------------------

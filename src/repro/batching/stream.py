@@ -10,6 +10,12 @@ the numpy epoch order from `default_rng((seed, epoch))`, the device
 sampling key from `fold_in(fold_in(key(seed), epoch), pos)`. A stream
 restored mid-epoch from a cursor therefore reproduces the continuation
 bit-exactly, with no RNG state in the checkpoint beyond the cursor itself.
+Shared-randomness samplers (LABOR) additionally receive the EPOCH-level
+key `fold_in(key(seed), epoch)`, also a pure function of the cursor.
+
+Neighbor sampling is pluggable: the stream resolves the policy's
+`sampler_spec()` through `repro.sampling` (override with `sampler=`), and
+the sampler rides into the jit-compiled builder as a static argument.
 
 Prefetch: while the consumer runs step i, the builder for batch i+1 has
 already been dispatched (jit dispatch is async), overlapping host batch
@@ -24,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sampling
 from repro.batching.order import make_batches
 from repro.batching.policy import BatchPolicy, as_policy
 from repro.core import minibatch as mb
@@ -49,7 +56,8 @@ class BatchStream:
 
     def __init__(self, graph: Graph, policy, batch_size: int, fanouts,
                  caps, *, seed: int = 0, cursor: Optional[Cursor] = None,
-                 drop_last: bool = False, mode: str = "sample",
+                 drop_last: bool = False, sampler=None,
+                 mode: str = "sample",
                  device_graph: Optional[DeviceGraph] = None,
                  labels: Optional[jnp.ndarray] = None,
                  prefetch: bool = True):
@@ -61,7 +69,10 @@ class BatchStream:
         self.seed = seed
         self.cursor = cursor or Cursor()
         self.drop_last = drop_last
-        self.mode = mode
+        # sampler=None binds the policy's own sampler_spec(); mode="all" is
+        # the deprecated string knob for the full-neighborhood sampler
+        self.sampler = sampling.resolve(
+            sampler, mode, lambda: sampling.for_policy(self.policy))
         self.prefetch = prefetch
         self.g = device_graph or DeviceGraph.from_graph(graph)
         self.labels = labels if labels is not None \
@@ -84,17 +95,21 @@ class BatchStream:
         return len(self.root_batches(
             self.cursor.epoch if epoch is None else epoch))
 
+    def epoch_key(self, epoch: int):
+        """Epoch-level PRNG key — what shared-randomness samplers (LABOR)
+        draw from, so picks repeat across the epoch's batches and hops."""
+        return jax.random.fold_in(jax.random.key(self.seed), epoch)
+
     def batch_key(self, epoch: int, pos: int):
         """PRNG key for batch (epoch, pos) — pure function of the cursor."""
-        k = jax.random.key(self.seed)
-        return jax.random.fold_in(jax.random.fold_in(k, epoch), pos)
+        return jax.random.fold_in(self.epoch_key(epoch), pos)
 
     def build(self, roots: np.ndarray, epoch: int, pos: int) -> mb.MiniBatch:
         """Compile/dispatch the static-shape batch for these roots."""
         return mb.build_batch(
             self.batch_key(epoch, pos), self.g,
             jnp.asarray(roots, jnp.int32), self.labels, self.fanouts,
-            self.caps, self.policy.p, mode=self.mode)
+            self.caps, self.sampler, epoch_key=self.epoch_key(epoch))
 
     # -- iteration -----------------------------------------------------------
     def _take(self, epoch: int, pos: int, batches: np.ndarray) -> mb.MiniBatch:
@@ -146,16 +161,20 @@ class BatchStream:
 
 def eval_batches(graph: Graph, ids: np.ndarray, batch_size: int, fanouts,
                  caps, p: float = 0.5, *, seed: int = 0,
-                 mode: str = "sample",
+                 sampler=None, mode: str = "sample",
                  device_graph: Optional[DeviceGraph] = None,
                  labels: Optional[jnp.ndarray] = None
                  ) -> Iterator[mb.MiniBatch]:
     """Deterministic sequential batches over `ids` (padded with -1), with
     one-batch prefetch. Keys derive from (seed, chunk index) only, so
-    evaluation never perturbs training RNG state."""
+    evaluation never perturbs training RNG state. `sampler=None` keeps the
+    biased two-phase draw at `p` (the uniform-eval contract); `mode="all"`
+    is the deprecated knob for the full-neighborhood sampler."""
     g = device_graph or DeviceGraph.from_graph(graph)
     labels = labels if labels is not None else jnp.asarray(graph.labels)
     fanouts, caps = tuple(fanouts), tuple(caps)
+    sampler = sampling.resolve(
+        sampler, mode, lambda: sampling.BiasedTwoPhaseSampler(p=float(p)))
     key = jax.random.key(seed)
     chunks = []
     for i in range(0, len(ids), batch_size):
@@ -167,7 +186,7 @@ def eval_batches(graph: Graph, ids: np.ndarray, batch_size: int, fanouts,
     def build(j):
         return mb.build_batch(
             jax.random.fold_in(key, j), g, jnp.asarray(chunks[j], jnp.int32),
-            labels, fanouts, caps, p, mode=mode)
+            labels, fanouts, caps, sampler, epoch_key=key)
 
     nxt = build(0) if chunks else None
     for j in range(len(chunks)):

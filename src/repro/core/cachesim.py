@@ -36,14 +36,20 @@ def lru_miss_rate(batches: Iterable[np.ndarray], capacity: int) -> float:
 
 def policy_access_stream(graph, policy, batch_size, fanouts, n_batches=16,
                          seed=0) -> List[np.ndarray]:
-    """Unique input-node ids per batch under `policy` (numpy builder)."""
+    """Unique input-node ids per batch under `policy` (numpy builder),
+    sampled through the policy's bound sampler. The shared `ctx` spans the
+    whole stream, so LABOR's per-epoch ranks persist across batches — the
+    cross-batch repetition is exactly what an LRU cache rewards."""
+    from repro import sampling
     from repro.core import partition
     from repro.core.minibatch import build_batch_np
     rng = np.random.default_rng(seed)
     batches = partition.batches_for_epoch(
         graph.train_ids, graph.communities, policy, batch_size, rng)
+    sampler = sampling.for_policy(policy)
+    ctx = {}
     out = []
     for b in batches[:n_batches]:
-        _, level = build_batch_np(rng, graph, b, fanouts, policy.p)
+        _, level = build_batch_np(rng, graph, b, fanouts, sampler, ctx=ctx)
         out.append(level)
     return out

@@ -1,11 +1,18 @@
 """Static-shape mini-batch construction (the TPU-native core of COMM-RAND).
 
 A batch is a tower of node levels F_0 (roots) ⊂ F_1 ⊂ ... ⊂ F_L (input
-level), built by biased neighbor sampling + *static-size dedup*
-(`jnp.unique(..., size=cap)`). The caps are CALIBRATED PER POLICY
-(`calibrate_caps`): community-biased policies dedup far more aggressively, so
-their compiled batches carry smaller gather buffers — the paper's working-set
+level), built by pluggable neighbor sampling (`repro.sampling`) + *static-
+size dedup* (`jnp.unique(..., size=cap)`). The caps are CALIBRATED PER
+(POLICY, SAMPLER) (`calibrate_caps`): community-biased policies — and
+LABOR's shared-randomness sampler — dedup far more aggressively, so their
+compiled batches carry smaller gather buffers: the paper's working-set
 reduction, expressed at compile time (DESIGN.md §2).
+
+The sampler rides through jit as a STATIC argument (samplers are frozen
+dataclasses), so each sampler gets its own compiled builder. Samplers with
+`shared_randomness` (LABOR) receive the EPOCH-level key — identical across
+hops and batches — instead of the per-(batch, hop) key, which is what
+makes overlapping neighborhoods pick identical neighbors.
 
 Blocks are stored input-side first: blocks[0] maps F_L -> F_{L-1}. Every dst
 has exactly `fanout` sampled source slots + one self slot, so aggregation is
@@ -21,9 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.batching.policy import CommRandPolicy
+from repro import sampling
 from repro.core import partition
-from repro.core.sampler import sample_neighbors
 from repro.graphs.csr import DeviceGraph, Graph
 
 
@@ -68,11 +74,10 @@ def _positions(level: jnp.ndarray, ids: jnp.ndarray):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("fanouts", "caps", "mode"))
-def build_batch(key, g: DeviceGraph, roots, labels_all, fanouts: Tuple[int],
-                caps: Tuple[int], p, mode: str = "sample") -> MiniBatch:
-    """roots: (B,) int32 with -1 padding. caps: per-level unique caps,
-    len == len(fanouts), cap for levels 1..L (level 0 cap is B)."""
+                   static_argnames=("fanouts", "caps", "sampler"))
+def _build_batch(key, epoch_key, g: DeviceGraph, roots, labels_all,
+                 fanouts: Tuple[int], caps: Tuple[int],
+                 sampler) -> MiniBatch:
     N = g.num_nodes
     B = roots.shape[0]
     root_mask = roots >= 0
@@ -87,7 +92,10 @@ def build_batch(key, g: DeviceGraph, roots, labels_all, fanouts: Tuple[int],
     keys = jax.random.split(key, len(fanouts))
     for h, (r, cap) in enumerate(zip(fanouts, caps)):
         prev = levels[-1]
-        srcs, smask = sample_neighbors(keys[h], g, prev, r, p, mode=mode)
+        # shared-randomness samplers (LABOR) draw from the epoch key so the
+        # same source node picks the same neighbors at every hop and batch
+        k_h = epoch_key if sampler.shared_randomness else keys[h]
+        srcs, smask = sampler.sample(k_h, g, prev, r)
         all_ids = jnp.concatenate([prev, srcs.reshape(-1)])
         nxt = jnp.unique(all_ids, size=cap, fill_value=N).astype(jnp.int32)
         self_pos, self_ok = _positions(nxt, prev)
@@ -116,57 +124,70 @@ def build_batch(key, g: DeviceGraph, roots, labels_all, fanouts: Tuple[int],
     )
 
 
+def build_batch(key, g: DeviceGraph, roots, labels_all, fanouts: Tuple[int],
+                caps: Tuple[int], sampler=0.5, mode: str = "sample", *,
+                epoch_key=None) -> MiniBatch:
+    """roots: (B,) int32 with -1 padding. caps: per-level unique caps,
+    len == len(fanouts), cap for levels 1..L (level 0 cap is B).
+
+    `sampler` is a `repro.sampling` sampler (or registry name/spec); a
+    bare float is the legacy signature and selects the biased two-phase
+    draw at that `p` (`mode="all"` likewise maps to the full-neighborhood
+    sampler) — see `sampling.resolve` for the one precedence rule.
+    `epoch_key` feeds shared-randomness samplers; it defaults to `key`,
+    which keeps direct calls deterministic but shares picks only within
+    this one batch — streams pass the real epoch key.
+    """
+    s = sampling.resolve(sampler, mode)
+    if epoch_key is None:
+        epoch_key = key
+    return _build_batch(key, epoch_key, g, roots, labels_all,
+                        tuple(fanouts), tuple(caps), s)
+
+
 # ---------------------------------------------------------------------------
 # numpy reference builder (exact dedup; calibration + test oracle)
 # ---------------------------------------------------------------------------
 def build_batch_np(rng: np.random.Generator, graph: Graph, roots, fanouts,
-                   p: float):
-    """Returns per-level unique-node counts + the input-level footprint."""
-    comm = graph.communities
+                   sampler=0.5, ctx: dict = None):
+    """Returns per-level unique-node counts + the input-level footprint.
+    `sampler` follows `build_batch`'s convention (float p == biased);
+    `ctx` carries per-epoch shared sampler state (LABOR's ranks) across
+    batches of one epoch."""
+    s = sampling.resolve(sampler)
+    ctx = {} if ctx is None else ctx
     level = np.unique(roots[roots >= 0])
     sizes = [len(level)]
     for r in fanouts:
-        srcs = []
-        for u in level:
-            s, e = graph.indptr[u], graph.indptr[u + 1]
-            nbrs = graph.indices[s:e]
-            if len(nbrs) == 0:
-                srcs.append(np.array([u] * r))
-                continue
-            intra = comm[nbrs] == comm[u]
-            ni, no = int(intra.sum()), int((~intra).sum())
-            w_i, w_o = p * ni, (1 - p) * no
-            pi = 1.0 if no == 0 else (0.0 if ni == 0 else w_i / (w_i + w_o))
-            cls = rng.random(r) < pi
-            nbr_i = nbrs[intra] if ni else nbrs
-            nbr_o = nbrs[~intra] if no else nbrs
-            pick = np.where(cls, nbr_i[rng.integers(0, max(ni, 1), r)],
-                            nbr_o[rng.integers(0, max(no, 1), r)])
-            srcs.append(pick)
-        level = np.unique(np.concatenate([level] + srcs))
+        srcs = s.sample_level_np(rng, graph, level, r, ctx)
+        level = np.unique(np.concatenate([level] + list(srcs)))
         sizes.append(len(level))
     return sizes, level
 
 
-def calibrate_caps(graph: Graph, policy: CommRandPolicy, batch_size: int,
+def calibrate_caps(graph: Graph, policy, batch_size: int,
                    fanouts, n_probe: int = 6, margin: float = 1.15,
                    seed: int = 0, align: int = 128) -> Tuple[int, ...]:
     """Policy-derived static caps: max unique nodes per level over probe
-    batches x margin, rounded up to `align` (TPU-friendly shapes).
+    batches x margin, rounded up to `align` (TPU-friendly shapes). The
+    probe samples through the policy's BOUND SAMPLER (`sampler_spec()`),
+    so e.g. LABOR's collapsed footprint yields smaller caps.
 
     Probe batch indices are drawn uniformly across the epoch: under
     comm_rand the LEADING batches of an epoch order are community-pure and
     under-estimate the footprint of the late, mixed batches."""
     rng = np.random.default_rng(seed)
+    s = sampling.for_policy(policy)
     maxes = np.zeros(len(fanouts), np.int64)
     probes = 0
     while probes < n_probe:
+        ctx = {}                        # fresh shared state per probe epoch
         batches = partition.batches_for_epoch(
             graph.train_ids, graph.communities, policy, batch_size, rng)
         take = min(max(1, n_probe - probes), len(batches))
         idx = np.sort(rng.choice(len(batches), size=take, replace=False))
         for b in batches[idx]:
-            sizes, _ = build_batch_np(rng, graph, b, fanouts, policy.p)
+            sizes, _ = build_batch_np(rng, graph, b, fanouts, s, ctx=ctx)
             maxes = np.maximum(maxes, sizes[1:])
             probes += 1
             if probes >= n_probe:

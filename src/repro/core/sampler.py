@@ -1,67 +1,39 @@
-"""Biased neighborhood sampling (paper §4.2, Figure 4).
+"""DEPRECATED — neighbor sampling moved to `repro.sampling`.
 
-Intra-community edges are drawn with unnormalized weight `p`, inter-community
-with `1-p`. Thanks to the intra-first CSR row layout (`n_intra[u]` split
-point), a draw is two-phase: pick the class with prob
-p*n_intra / (p*n_intra + (1-p)*n_inter), then uniform within the class —
-O(1) per sample, no per-edge weight array (the DGL implementation the paper
-uses carries an |E|-sized probability vector instead).
+This module used to hardcode the paper's biased two-phase draw (§4.2) plus
+a `mode="all"` string knob for full-neighborhood enumeration. Both are now
+registered samplers in the pluggable `repro.sampling` subsystem:
 
-`mode='all'` enumerates neighbors deterministically (fanout >= max degree
-gives exact full-neighborhood aggregation — used by equivalence tests).
-Sampling is with replacement within the class (DESIGN.md §7).
+    sample_neighbors(key, g, nodes, fanout, p)   -> BiasedTwoPhaseSampler(p)
+    sample_neighbors(..., mode="all")            -> FullNeighborhoodSampler()
+
+The shim below delegates bit-exactly (same key splits, same draws) and
+will be removed once external callers migrate. One contract change: `p`
+is consumed as a static Python float now (samplers are hashable static
+jit arguments), so calling this shim with a traced `p` under an outer
+`jax.jit` is no longer supported — pass a concrete float, or construct
+the sampler yourself.
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 
-import jax
-import jax.numpy as jnp
-
-from repro.graphs.csr import DeviceGraph
+from repro.sampling import BiasedTwoPhaseSampler, FullNeighborhoodSampler
 
 
-@partial(jax.jit, static_argnames=("fanout", "mode"))
-def sample_neighbors(key, g: DeviceGraph, nodes, fanout: int, p,
-                     mode: str = "sample"):
-    """nodes: (M,) int32, sentinel `num_nodes` for padding.
+def sample_neighbors(key, g, nodes, fanout: int, p, mode: str = "sample"):
+    """Deprecated: use `repro.sampling.make_sampler(...)` instead.
 
-    Returns (srcs (M, fanout) int32 — sentinel-propagating, self-loop for
-    isolated nodes; mask (M, fanout) bool).
+    nodes: (M,) int32, sentinel `num_nodes` for padding. Returns
+    (srcs (M, fanout) int32 — sentinel-propagating, self-loop for isolated
+    nodes; mask (M, fanout) bool).
     """
-    N = g.num_nodes
-    M = nodes.shape[0]
-    valid = nodes < N
-    safe = jnp.where(valid, nodes, 0)
-    start = g.indptr[safe]
-    deg = g.degrees[safe]
-    ni = g.n_intra[safe]
-    no = deg - ni
-
+    warnings.warn(
+        "repro.core.sampler.sample_neighbors is deprecated; use the "
+        "repro.sampling registry (BiasedTwoPhaseSampler / "
+        "FullNeighborhoodSampler)", DeprecationWarning, stacklevel=2)
     if mode == "all":
-        j = jnp.broadcast_to(jnp.arange(fanout), (M, fanout))
-        mask = (j < deg[:, None]) & valid[:, None]
-        offset = jnp.minimum(j, jnp.maximum(deg - 1, 0)[:, None])
-        src = g.indices[start[:, None] + offset]
-        src = jnp.where(mask, src, jnp.where(valid[:, None], safe[:, None], N))
-        return src.astype(jnp.int32), mask
-
-    k1, k2, k3 = jax.random.split(key, 3)
-    w_i = p * ni.astype(jnp.float32)
-    w_o = (1.0 - p) * no.astype(jnp.float32)
-    p_intra = jnp.where(w_i + w_o > 0, w_i / jnp.maximum(w_i + w_o, 1e-9), 0.0)
-    p_intra = jnp.where(no == 0, 1.0, jnp.where(ni == 0, 0.0, p_intra))
-
-    u_class = jax.random.uniform(k1, (M, fanout))
-    intra = u_class < p_intra[:, None]
-    u_off = jax.random.uniform(k2, (M, fanout))
-    off_i = jnp.floor(u_off * ni[:, None]).astype(jnp.int32)
-    off_o = ni[:, None] + jnp.floor(u_off * no[:, None]).astype(jnp.int32)
-    offset = jnp.where(intra, off_i, off_o)
-    offset = jnp.clip(offset, 0, jnp.maximum(deg - 1, 0)[:, None])
-    src = g.indices[start[:, None] + offset]
-    # isolated nodes aggregate themselves; padded nodes propagate sentinel
-    src = jnp.where(deg[:, None] > 0, src, safe[:, None])
-    src = jnp.where(valid[:, None], src, N)
-    mask = valid[:, None] & jnp.broadcast_to(deg[:, None] > 0, (M, fanout))
-    return src.astype(jnp.int32), mask
+        sampler = FullNeighborhoodSampler()
+    else:
+        sampler = BiasedTwoPhaseSampler(p=float(p))
+    return sampler.sample(key, g, nodes, int(fanout))

@@ -71,14 +71,16 @@ def reorder(graph: Graph, perm: np.ndarray) -> Graph:
     N = graph.num_nodes
     perm_inv = np.empty(N, np.int64)
     perm_inv[perm] = np.arange(N)
-    deg = graph.degrees()[perm]
+    old_deg = graph.degrees()
     new_indptr = np.zeros(N + 1, np.int64)
-    np.cumsum(deg, out=new_indptr[1:])
+    np.cumsum(old_deg[perm], out=new_indptr[1:])
+    # vectorized row move: edge e of old node u keeps its within-row offset
+    # and lands at new row perm_inv[u] — one gather/scatter over the edge
+    # array instead of a per-node Python loop
+    src = np.repeat(np.arange(N, dtype=np.int64), old_deg)
+    offs = np.arange(graph.num_edges, dtype=np.int64) - graph.indptr[src]
     new_indices = np.empty_like(graph.indices)
-    for i in range(N):                      # vectorized below for big graphs
-        s, e = graph.indptr[perm[i]], graph.indptr[perm[i] + 1]
-        new_indices[new_indptr[i]:new_indptr[i + 1]] = \
-            perm_inv[graph.indices[s:e]]
+    new_indices[new_indptr[perm_inv[src]] + offs] = perm_inv[graph.indices]
     out = replace(
         graph,
         indptr=new_indptr,
@@ -112,20 +114,26 @@ def intra_first_layout(graph: Graph) -> Graph:
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=["indptr", "indices", "n_intra", "communities", "degrees"],
-    meta_fields=["num_nodes"])
+    meta_fields=["num_nodes", "max_degree"])
 @dataclass
 class DeviceGraph:
-    """jnp mirrors used by the jit-compiled samplers/batch builder."""
+    """jnp mirrors used by the jit-compiled samplers/batch builder.
+
+    `max_degree` is static metadata: the LABOR sampler's shared-rank
+    top-k gathers an (M, max_degree) candidate tile, so the bound must be
+    known at trace time."""
     indptr: jnp.ndarray
     indices: jnp.ndarray
     n_intra: jnp.ndarray
     communities: jnp.ndarray
     degrees: jnp.ndarray
     num_nodes: int
+    max_degree: int = 0
 
     @staticmethod
     def from_graph(g: Graph) -> "DeviceGraph":
         assert g.n_intra is not None, "run intra_first_layout first"
+        deg = g.degrees()
         # int32 offsets: fine below ~2^31 edges; the pod-scale pipeline keeps
         # topology on hosts (DESIGN.md §4) so this bound is per-host.
         return DeviceGraph(
@@ -133,6 +141,7 @@ class DeviceGraph:
             indices=jnp.asarray(g.indices, jnp.int32),
             n_intra=jnp.asarray(g.n_intra, jnp.int32),
             communities=jnp.asarray(g.communities, jnp.int32),
-            degrees=jnp.asarray(g.degrees(), jnp.int32),
+            degrees=jnp.asarray(deg, jnp.int32),
             num_nodes=g.num_nodes,
+            max_degree=int(deg.max()) if len(deg) else 0,
         )

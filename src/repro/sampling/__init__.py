@@ -1,0 +1,28 @@
+"""Pluggable neighbor sampling (paper §4.2 / §6.3 as an API).
+
+    from repro import sampling
+
+    s = sampling.make_sampler("labor")          # or "biased"/"uniform"/"full"
+    srcs, mask = s.sample(epoch_key, device_graph, nodes, fanout=10)
+
+Samplers are frozen dataclasses — hashable, so `core.minibatch.build_batch`
+takes them as STATIC jit arguments and compiles one batch builder per
+sampler. `for_policy` resolves a `BatchPolicy.sampler_spec()` to the
+sampler the policy binds (every policy defaults to the biased two-phase
+draw at its `p`; `make_policy("labor")` binds the shared-randomness
+`LaborSampler`). The old `core.sampler.sample_neighbors` entry point is a
+deprecated shim over `BiasedTwoPhaseSampler` / `FullNeighborhoodSampler`.
+"""
+from repro.sampling.base import (NeighborSampler, as_sampler,   # noqa: F401
+                                 available_samplers, for_policy,
+                                 make_sampler, register_sampler, resolve)
+from repro.sampling.device import (BiasedTwoPhaseSampler,       # noqa: F401
+                                   FullNeighborhoodSampler, LaborSampler,
+                                   UniformSampler)
+
+__all__ = [
+    "BiasedTwoPhaseSampler", "FullNeighborhoodSampler", "LaborSampler",
+    "NeighborSampler", "UniformSampler", "as_sampler",
+    "available_samplers", "for_policy", "make_sampler", "register_sampler",
+    "resolve",
+]

@@ -1,0 +1,127 @@
+"""NeighborSampler protocol + registry.
+
+The paper's §6.3 comparison is really a comparison of *how neighbors are
+drawn*: the biased two-phase draw behind COMM-RAND (§4.2), plain uniform
+sampling, full-neighborhood enumeration, and LABOR's shared per-node
+randomness [9]. `repro.sampling` makes that axis a first-class pluggable
+API, the way `repro.batching.policy` made root ordering one.
+
+A sampler is a frozen (hashable) dataclass so it can ride through
+`jax.jit` as a STATIC argument — `core.minibatch.build_batch` specializes
+the compiled batch builder per sampler, and `CapsCalibrator` keys its disk
+cache on `describe()` so each sampler gets its own calibrated caps.
+
+Registered names:
+
+    biased    two-phase intra/inter draw, weight `p` (paper §4.2; default)
+    uniform   one uniform draw over the whole adjacency row
+    full      deterministic enumeration (retires the old `mode="all"` knob)
+    labor     shared-randomness top-k by hash(epoch key, source node id)
+
+Policies bind samplers through `BatchPolicy.sampler_spec()`, which returns
+a plain `(name, kwargs)` pair (no import cycle); `for_policy` resolves it.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Protocol, Tuple, runtime_checkable
+
+
+@runtime_checkable
+class NeighborSampler(Protocol):
+    """Protocol every registered sampler satisfies.
+
+    `sample` is the device path (jit-traceable, static `self`/`fanout`);
+    `sample_level_np` is the exact numpy mirror used by cap calibration,
+    the cache simulator, and tests. `shared_randomness` tells the batch
+    builder to hand the sampler the EPOCH-level key (same across batches
+    and hops) instead of a per-(batch, hop) key.
+    """
+
+    shared_randomness: bool
+
+    @property
+    def name(self) -> str: ...
+
+    def sample(self, key, g, nodes, fanout: int):
+        """nodes: (M,) int32, sentinel `g.num_nodes` for padding.
+        Returns (srcs (M, fanout) int32, mask (M, fanout) bool)."""
+        ...
+
+    def sample_level_np(self, rng, graph, level, fanout: int,
+                        ctx: dict) -> List:
+        """Numpy mirror: list of picked-neighbor arrays for `level` nodes.
+        `ctx` is a per-epoch dict for shared state (LABOR's ranks)."""
+        ...
+
+    def describe(self) -> str: ...
+
+
+_REGISTRY: Dict[str, Callable[..., "NeighborSampler"]] = {}
+
+
+def register_sampler(name: str):
+    """Register a sampler factory under `name` (used by `make_sampler`)."""
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def make_sampler(name: str, **kwargs) -> "NeighborSampler":
+    """Instantiate a registered sampler: `make_sampler("biased", p=1.0)`."""
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown sampler {name!r}; registered: {available_samplers()}")
+    return _REGISTRY[name](**kwargs)
+
+
+def available_samplers() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def as_sampler(obj) -> "NeighborSampler":
+    """Normalize a sampler name / (name, kwargs) spec / instance."""
+    if isinstance(obj, str):
+        return make_sampler(obj)
+    if isinstance(obj, (tuple, list)) and len(obj) == 2 \
+            and isinstance(obj[0], str):
+        return make_sampler(obj[0], **dict(obj[1]))
+    if hasattr(obj, "sample") and hasattr(obj, "shared_randomness"):
+        return obj
+    raise TypeError(f"not a neighbor sampler: {obj!r}")
+
+
+def resolve(sampler, mode: str = "sample", fallback=None) -> "NeighborSampler":
+    """THE precedence rule for every entry point (`build_batch`,
+    `BatchStream`, `eval_batches`): an explicit sampler wins; a bare
+    number is the legacy float-p signature (biased draw, or full
+    enumeration under the deprecated `mode="all"`); otherwise `mode="all"`
+    itself; otherwise `fallback` (a sampler or zero-arg factory)."""
+    import numpy as np
+    from repro.sampling import device  # registers the built-in samplers
+
+    if sampler is not None:
+        if isinstance(sampler, bool):
+            raise TypeError(f"not a neighbor sampler: {sampler!r}")
+        if isinstance(sampler, (int, float, np.floating)) or (
+                hasattr(sampler, "ndim") and getattr(sampler, "ndim") == 0):
+            if mode == "all":
+                return device.FullNeighborhoodSampler()
+            return device.BiasedTwoPhaseSampler(p=float(sampler))
+        return as_sampler(sampler)
+    if mode == "all":
+        return device.FullNeighborhoodSampler()
+    return fallback() if callable(fallback) else as_sampler(fallback)
+
+
+def for_policy(policy) -> "NeighborSampler":
+    """The sampler a `BatchPolicy` binds: its `sampler_spec()` if it has
+    one, else the biased two-phase draw at the policy's `p` (the behavior
+    every policy had before samplers were pluggable)."""
+    spec = getattr(policy, "sampler_spec", None)
+    if callable(spec):
+        return as_sampler(spec())
+    p = getattr(policy, "p", None)
+    if p is not None:
+        return make_sampler("biased", p=float(p))
+    raise TypeError(f"cannot derive a sampler from policy {policy!r}")

@@ -1,0 +1,269 @@
+"""The four registered neighbor samplers (device path + numpy mirrors).
+
+All of them share the static-shape contract of the old
+`core.sampler.sample_neighbors`: (M,) nodes in (sentinel `num_nodes` for
+padding), (M, fanout) int32 sources + bool mask out, self-loop for
+isolated nodes, sentinel-propagating for padded rows.
+
+`BiasedTwoPhaseSampler` is the old code moved verbatim (same key splits,
+same draws — bit-exact with the deprecated `core.sampler` entry point).
+`LaborSampler` is the device-side LABOR path [9]: every candidate
+neighbor gets a rank from a hash of (epoch key, source node id), and each
+destination keeps its `fanout` lowest-ranked neighbors — so overlapping
+neighborhoods select IDENTICAL neighbors and the batch builder's dedup
+actually collapses them, with no community information at all.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import ClassVar, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sampling.base import register_sampler
+
+
+def _row_meta(g, nodes):
+    """Shared per-row lookups; `safe` clamps padded rows to node 0."""
+    valid = nodes < g.num_nodes
+    safe = jnp.where(valid, nodes, 0)
+    return valid, safe, g.indptr[safe], g.degrees[safe]
+
+
+def _finish(g, valid, safe, deg, src, fanout):
+    """Isolated nodes aggregate themselves; padded rows propagate the
+    sentinel — identical to the old sampler's tail."""
+    src = jnp.where(deg[:, None] > 0, src, safe[:, None])
+    src = jnp.where(valid[:, None], src, g.num_nodes)
+    mask = jnp.broadcast_to((valid & (deg > 0))[:, None], src.shape)
+    return src.astype(jnp.int32), mask
+
+
+@register_sampler("biased")
+@dataclass(frozen=True)
+class BiasedTwoPhaseSampler:
+    """Paper §4.2 (Figure 4): intra-community edges drawn with unnormalized
+    weight `p`, inter with `1-p`. Thanks to the intra-first CSR row layout
+    (`n_intra[u]` split point) a draw is two-phase — pick the class with
+    prob p*n_intra / (p*n_intra + (1-p)*n_inter), then uniform within the
+    class — O(1) per sample, no |E|-sized weight array. With replacement
+    within the class (DESIGN.md §7). p=0.5 is uniform over neighbors."""
+
+    p: float = 0.5
+    shared_randomness: ClassVar[bool] = False
+
+    @property
+    def name(self) -> str:
+        return "biased"
+
+    @functools.partial(jax.jit, static_argnames=("self", "fanout"))
+    def sample(self, key, g, nodes, fanout: int):
+        M = nodes.shape[0]
+        valid, safe, start, deg = _row_meta(g, nodes)
+        ni = g.n_intra[safe]
+        no = deg - ni
+
+        k1, k2, k3 = jax.random.split(key, 3)
+        w_i = self.p * ni.astype(jnp.float32)
+        w_o = (1.0 - self.p) * no.astype(jnp.float32)
+        p_intra = jnp.where(w_i + w_o > 0,
+                            w_i / jnp.maximum(w_i + w_o, 1e-9), 0.0)
+        p_intra = jnp.where(no == 0, 1.0,
+                            jnp.where(ni == 0, 0.0, p_intra))
+
+        u_class = jax.random.uniform(k1, (M, fanout))
+        intra = u_class < p_intra[:, None]
+        u_off = jax.random.uniform(k2, (M, fanout))
+        off_i = jnp.floor(u_off * ni[:, None]).astype(jnp.int32)
+        off_o = ni[:, None] + jnp.floor(u_off * no[:, None]).astype(jnp.int32)
+        offset = jnp.where(intra, off_i, off_o)
+        offset = jnp.clip(offset, 0, jnp.maximum(deg - 1, 0)[:, None])
+        src = g.indices[start[:, None] + offset]
+        return _finish(g, valid, safe, deg, src, fanout)
+
+    def sample_level_np(self, rng, graph, level, fanout: int,
+                        ctx: dict) -> List:
+        comm = graph.communities
+        srcs = []
+        for u in level:
+            s, e = graph.indptr[u], graph.indptr[u + 1]
+            nbrs = graph.indices[s:e]
+            if len(nbrs) == 0:
+                srcs.append(np.array([u] * fanout))
+                continue
+            intra = comm[nbrs] == comm[u]
+            ni, no = int(intra.sum()), int((~intra).sum())
+            w_i, w_o = self.p * ni, (1 - self.p) * no
+            pi = 1.0 if no == 0 else (0.0 if ni == 0 else w_i / (w_i + w_o))
+            cls = rng.random(fanout) < pi
+            nbr_i = nbrs[intra] if ni else nbrs
+            nbr_o = nbrs[~intra] if no else nbrs
+            pick = np.where(cls,
+                            nbr_i[rng.integers(0, max(ni, 1), fanout)],
+                            nbr_o[rng.integers(0, max(no, 1), fanout)])
+            srcs.append(pick)
+        return srcs
+
+    def describe(self) -> str:
+        return f"biased-two-phase(p={self.p:g})"
+
+
+@register_sampler("uniform")
+@dataclass(frozen=True)
+class UniformSampler:
+    """Uniform with-replacement draw over the whole adjacency row — the
+    classic GraphSAGE sampler, with no community bias and a single uniform
+    per slot (distributionally equal to `biased` at p=0.5)."""
+
+    shared_randomness: ClassVar[bool] = False
+
+    @property
+    def name(self) -> str:
+        return "uniform"
+
+    @functools.partial(jax.jit, static_argnames=("self", "fanout"))
+    def sample(self, key, g, nodes, fanout: int):
+        M = nodes.shape[0]
+        valid, safe, start, deg = _row_meta(g, nodes)
+        u = jax.random.uniform(key, (M, fanout))
+        offset = jnp.floor(u * deg[:, None]).astype(jnp.int32)
+        offset = jnp.clip(offset, 0, jnp.maximum(deg - 1, 0)[:, None])
+        src = g.indices[start[:, None] + offset]
+        return _finish(g, valid, safe, deg, src, fanout)
+
+    def sample_level_np(self, rng, graph, level, fanout: int,
+                        ctx: dict) -> List:
+        srcs = []
+        for u in level:
+            nbrs = graph.indices[graph.indptr[u]:graph.indptr[u + 1]]
+            if len(nbrs) == 0:
+                srcs.append(np.array([u] * fanout))
+                continue
+            srcs.append(nbrs[rng.integers(0, len(nbrs), fanout)])
+        return srcs
+
+    def describe(self) -> str:
+        return "uniform"
+
+
+@register_sampler("full")
+@dataclass(frozen=True)
+class FullNeighborhoodSampler:
+    """Deterministic enumeration of the first `fanout` neighbors (fanout >=
+    max degree gives exact full-neighborhood aggregation — the equivalence
+    tests' oracle). Retires the old `mode="all"` string knob."""
+
+    shared_randomness: ClassVar[bool] = False
+
+    @property
+    def name(self) -> str:
+        return "full"
+
+    @functools.partial(jax.jit, static_argnames=("self", "fanout"))
+    def sample(self, key, g, nodes, fanout: int):
+        N = g.num_nodes
+        M = nodes.shape[0]
+        valid, safe, start, deg = _row_meta(g, nodes)
+        j = jnp.broadcast_to(jnp.arange(fanout), (M, fanout))
+        mask = (j < deg[:, None]) & valid[:, None]
+        offset = jnp.minimum(j, jnp.maximum(deg - 1, 0)[:, None])
+        src = g.indices[start[:, None] + offset]
+        src = jnp.where(mask, src,
+                        jnp.where(valid[:, None], safe[:, None], N))
+        return src.astype(jnp.int32), mask
+
+    def sample_level_np(self, rng, graph, level, fanout: int,
+                        ctx: dict) -> List:
+        return [graph.indices[graph.indptr[u]:graph.indptr[u + 1]][:fanout]
+                for u in level]
+
+    def describe(self) -> str:
+        return "full-neighborhood"
+
+
+def _hash_rank01(key, ids):
+    """Shared LABOR randomness: a murmur3-finalizer-style mix of each
+    candidate node id with the epoch key's raw words -> float32 in [0, 1).
+    Depends ONLY on (key, id): the same source node gets the same rank in
+    every row, batch, and hop of an epoch."""
+    x = ids.astype(jnp.uint32)
+    for w in jax.random.key_data(key).ravel().astype(jnp.uint32):
+        x = x ^ w
+        x = x * jnp.uint32(0x85EBCA6B)
+        x = x ^ (x >> 13)
+        x = x * jnp.uint32(0xC2B2AE35)
+        x = x ^ (x >> 16)
+    return x.astype(jnp.float32) * jnp.float32(2.0 ** -32)
+
+
+@register_sampler("labor")
+@dataclass(frozen=True)
+class LaborSampler:
+    """Device-side LABOR-lite [9] (Balın et al.): every candidate neighbor
+    t gets rank = hash(epoch key, t); each destination keeps its `fanout`
+    LOWEST-ranked neighbors (without replacement). Because ranks are a
+    pure function of the candidate id and the epoch key, destinations with
+    overlapping neighborhoods pick the shared low-rank candidates — the
+    unique-node footprint collapses under dedup with zero community info,
+    and the picks repeat across hops and batches within an epoch (new key
+    -> fresh ranks each epoch).
+
+    The rank gather materializes an (M, max_degree) tile, so per-draw cost
+    is O(max_degree) rather than the biased sampler's O(1) — LABOR trades
+    sampling FLOPs for feature-gather bytes, which is the paper's bound.
+    """
+
+    shared_randomness: ClassVar[bool] = True
+
+    @property
+    def name(self) -> str:
+        return "labor"
+
+    @functools.partial(jax.jit, static_argnames=("self", "fanout"))
+    def sample(self, key, g, nodes, fanout: int):
+        if g.max_degree == 0 and g.indices.shape[0] > 0:
+            raise ValueError(
+                "DeviceGraph.max_degree is unset; rebuild the device graph "
+                "with DeviceGraph.from_graph for the LABOR sampler")
+        M = nodes.shape[0]
+        D = max(int(g.max_degree), fanout, 1)
+        valid, safe, start, deg = _row_meta(g, nodes)
+        j = jnp.arange(D)
+        in_row = j[None, :] < deg[:, None]
+        offset = jnp.minimum(j[None, :], jnp.maximum(deg - 1, 0)[:, None])
+        cand = g.indices[start[:, None] + offset]          # (M, D)
+        # hash each of the N node ids once, then gather: N ops instead of
+        # re-mixing every element of the (M, D) candidate tile
+        rank_all = _hash_rank01(
+            key, jnp.arange(g.num_nodes, dtype=jnp.int32))
+        rank = jnp.where(in_row, rank_all[cand], jnp.inf)
+        _, top = jax.lax.top_k(-rank, fanout)              # k smallest ranks
+        src = jnp.take_along_axis(cand, top, axis=1)
+        keep = jnp.arange(fanout)[None, :] < \
+            jnp.minimum(deg, fanout)[:, None]
+        mask = keep & valid[:, None]
+        src = jnp.where(mask, src,
+                        jnp.where(valid[:, None], safe[:, None],
+                                  g.num_nodes))
+        return src.astype(jnp.int32), mask
+
+    def sample_level_np(self, rng, graph, level, fanout: int,
+                        ctx: dict) -> List:
+        rank = ctx.get("labor_rank")
+        if rank is None:                    # one shared draw per epoch
+            rank = ctx["labor_rank"] = rng.random(graph.num_nodes)
+        srcs = []
+        for u in level:
+            nbrs = graph.indices[graph.indptr[u]:graph.indptr[u + 1]]
+            if len(nbrs) == 0:
+                continue
+            if len(nbrs) > fanout:
+                nbrs = nbrs[np.argpartition(rank[nbrs], fanout)[:fanout]]
+            srcs.append(nbrs)
+        return srcs
+
+    def describe(self) -> str:
+        return "labor(shared-hash-topk)"

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sampling
 from repro.batching import (BatchStream, CapsCalibrator, Cursor, as_policy,
                             eval_batches, make_policy)
 from repro.configs.base import GNNConfig, TrainConfig
@@ -59,7 +60,7 @@ class TrainResult:
     history: List[EpochMetrics] = field(default_factory=list)
 
 
-def _make_steps(cfg: GNNConfig, tcfg: TrainConfig, caps, fanouts):
+def _make_steps(cfg: GNNConfig, tcfg: TrainConfig):
     @functools.partial(jax.jit, static_argnames=())
     def train_step(params, opt_state, batch: mb.MiniBatch, feats, degrees,
                    lr, key):
@@ -107,17 +108,20 @@ class GNNTrainer:
         self.labels = jnp.asarray(graph.labels)
         self.degrees = self.g.degrees
         self.fanouts = tuple(cfg.fanout[:cfg.num_layers])
+        # the policy binds its neighbor sampler (repro.sampling); caps are
+        # calibrated — and disk-cached — per (policy, sampler) pair
+        self.sampler = sampling.for_policy(self.policy)
         cal = calibrator or CapsCalibrator(seed=seed)
         self.caps = caps or cal.caps_for(
             graph, self.policy, tcfg.batch_size, self.fanouts)
         # eval always uses the uniform policy (identical across compared
         # policies) — calibrate once with p=0.5
         self.eval_policy = make_policy("rand")
+        self.eval_sampler = sampling.for_policy(self.eval_policy)
         eval_cal = calibrator or CapsCalibrator(seed=seed + 1)
         self.eval_caps = eval_caps or eval_cal.caps_for(
             graph, self.eval_policy, tcfg.batch_size, self.fanouts)
-        self.train_step, self.eval_step = _make_steps(
-            cfg, tcfg, self.caps, self.fanouts)
+        self.train_step, self.eval_step = _make_steps(cfg, tcfg)
         self.params = init_gnn(cfg, jax.random.key(seed))
         self.opt_state = adamw.init(self.params)
         self.stream = BatchStream(
@@ -170,13 +174,14 @@ class GNNTrainer:
             self.graph.train_ids[:8]
         b = mb.build_batch(jax.random.key(0), self.g,
                            jnp.asarray(roots, jnp.int32), self.labels,
-                           self.fanouts, self.caps, self.policy.p)
+                           self.fanouts, self.caps, self.sampler)
         self.params, self.opt_state, _ = self.train_step(
             self.params, self.opt_state, b, self.feats, self.degrees,
             0.0, jax.random.key(0))
         be = mb.build_batch(jax.random.key(0), self.g,
                             jnp.asarray(roots, jnp.int32), self.labels,
-                            self.fanouts, self.eval_caps, self.eval_policy.p)
+                            self.fanouts, self.eval_caps,
+                            self.eval_sampler)
         self.eval_step(self.params, be, self.feats, self.degrees)
         self.params, self.opt_state = saved
         return self
@@ -198,8 +203,11 @@ class GNNTrainer:
         for batch in self.stream.epoch():
             losses.append(self._train_one(batch, lr))
             uniq.append(batch.num_unique)
-        jax.block_until_ready(losses[-1])
+        if losses:
+            jax.block_until_ready(losses[-1])
         dt = time.perf_counter() - t0
+        if not losses:          # resumed exactly on an epoch boundary
+            return {"loss": 0.0, "time": dt, "uniq": 0.0}
         return {"loss": float(np.mean([float(l) for l in losses])),
                 "time": dt,
                 "uniq": float(np.mean([float(u) for u in uniq]))}
@@ -217,7 +225,8 @@ class GNNTrainer:
         tot_l, tot_a, tot_n = 0.0, 0.0, 0.0
         for batch in eval_batches(
                 self.graph, ids, self.tcfg.batch_size, self.fanouts,
-                self.eval_caps, self.eval_policy.p, seed=self.seed + 17,
+                self.eval_caps, sampler=self.eval_sampler,
+                seed=self.seed + 17,
                 device_graph=self.g, labels=self.labels):
             l, a, n = self.eval_step(self.params, batch, self.feats,
                                      self.degrees)

@@ -1,0 +1,259 @@
+"""The `repro.sampling` subsystem: registry round-trips, the LABOR
+shared-randomness invariants, footprint ordering vs rand, back-compat of
+the legacy `core.sampler` / float-p entry points, and the satellite
+refactors that rode along (vectorized reorder, bucketed ClusterGCN)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import sampling
+from repro.batching import BatchStream, available_policies, make_policy
+from repro.batching.policy import root_batches
+from repro.core import minibatch as mb
+from repro.graphs.csr import DeviceGraph
+
+FANOUTS = (5, 5)
+
+
+@pytest.fixture(scope="module")
+def gdev(tiny_graph):
+    return DeviceGraph.from_graph(tiny_graph)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_has_all_samplers():
+    assert set(sampling.available_samplers()) >= {"biased", "uniform",
+                                                  "full", "labor"}
+
+
+@pytest.mark.parametrize("name", ["biased", "uniform", "full", "labor"])
+def test_registry_roundtrip(name, gdev, tiny_graph):
+    s = sampling.make_sampler(name)
+    assert s.name == name
+    assert s.describe()
+    assert sampling.as_sampler(name).describe() == s.describe()
+    assert sampling.as_sampler(s) is s
+    assert sampling.as_sampler((name, {})).describe() == s.describe()
+    nodes = jnp.asarray(tiny_graph.train_ids[:32], jnp.int32)
+    srcs, mask = s.sample(jax.random.key(0), gdev, nodes, 7)
+    assert srcs.shape == (32, 7) and mask.shape == (32, 7)
+    # picks are real neighbors (or self)
+    g = tiny_graph
+    srcs_np, mask_np = np.asarray(srcs), np.asarray(mask)
+    for i, u in enumerate(np.asarray(nodes)):
+        nbrs = set(g.indices[g.indptr[u]:g.indptr[u + 1]].tolist())
+        for j in range(7):
+            if mask_np[i, j]:
+                assert int(srcs_np[i, j]) in nbrs or int(srcs_np[i, j]) == u
+
+
+def test_unknown_sampler_raises():
+    with pytest.raises(KeyError):
+        sampling.make_sampler("nope")
+    with pytest.raises(TypeError):
+        sampling.as_sampler(object())
+
+
+def test_every_policy_binds_a_sampler():
+    for name in available_policies():
+        s = sampling.for_policy(make_policy(name))
+        assert hasattr(s, "sample")
+    assert sampling.for_policy(make_policy("labor")).name == "labor"
+    assert sampling.for_policy(make_policy("comm_rand", p=1.0)).p == 1.0
+
+
+# ---------------------------------------------------------------------------
+# back-compat shims
+# ---------------------------------------------------------------------------
+def test_core_sampler_shim_is_bit_exact(gdev, tiny_graph):
+    from repro.core.sampler import sample_neighbors
+    nodes = jnp.asarray(tiny_graph.train_ids[:64], jnp.int32)
+    for p in (0.5, 0.9):
+        with pytest.deprecated_call():
+            s_old, m_old = sample_neighbors(jax.random.key(3), gdev, nodes,
+                                            9, p)
+        s_new, m_new = sampling.BiasedTwoPhaseSampler(p).sample(
+            jax.random.key(3), gdev, nodes, 9)
+        np.testing.assert_array_equal(np.asarray(s_old), np.asarray(s_new))
+        np.testing.assert_array_equal(np.asarray(m_old), np.asarray(m_new))
+    with pytest.deprecated_call():
+        s_old, m_old = sample_neighbors(jax.random.key(4), gdev, nodes, 9,
+                                        0.5, mode="all")
+    s_new, m_new = sampling.FullNeighborhoodSampler().sample(
+        jax.random.key(4), gdev, nodes, 9)
+    np.testing.assert_array_equal(np.asarray(s_old), np.asarray(s_new))
+    np.testing.assert_array_equal(np.asarray(m_old), np.asarray(m_new))
+
+
+def test_build_batch_float_p_equals_sampler_object(gdev, tiny_graph):
+    """The legacy float-p signature routes through BiasedTwoPhaseSampler."""
+    roots = jnp.asarray(tiny_graph.train_ids[:128], jnp.int32)
+    labels = jnp.asarray(tiny_graph.labels)
+    a = mb.build_batch(jax.random.key(1), gdev, roots, labels, FANOUTS,
+                       (1024, 1536), 0.9)
+    b = mb.build_batch(jax.random.key(1), gdev, roots, labels, FANOUTS,
+                       (1024, 1536), sampling.BiasedTwoPhaseSampler(0.9))
+    for la, lb in zip(a.levels, b.levels):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    np.testing.assert_array_equal(np.asarray(a.labels), np.asarray(b.labels))
+
+
+# ---------------------------------------------------------------------------
+# LABOR shared-randomness invariants
+# ---------------------------------------------------------------------------
+def _picks(srcs, mask, row):
+    return set(np.asarray(srcs)[row][np.asarray(mask)[row]].tolist())
+
+
+def test_labor_same_source_same_picks_within_epoch(gdev, tiny_graph):
+    """The same source node draws the same neighbors wherever it appears
+    (any row, any node set, any hop) under one epoch key — and fresh ones
+    under the next epoch's key."""
+    lab = sampling.LaborSampler()
+    k = jax.random.key(11)
+    us = [int(u) for u in tiny_graph.train_ids[:8]]
+    a, am = lab.sample(k, gdev, jnp.asarray(us, jnp.int32), 5)
+    b, bm = lab.sample(k, gdev, jnp.asarray(us[::-1] + [0, 1], jnp.int32), 5)
+    for i, u in enumerate(us):
+        assert _picks(a, am, i) == _picks(b, bm, len(us) - 1 - i)
+    k2 = jax.random.key(12)
+    c, cm = lab.sample(k2, gdev, jnp.asarray(us, jnp.int32), 5)
+    assert any(_picks(a, am, i) != _picks(c, cm, i)
+               for i in range(len(us)))
+
+
+def test_labor_picks_without_replacement(gdev, tiny_graph):
+    lab = sampling.LaborSampler()
+    nodes = jnp.asarray(tiny_graph.train_ids[:64], jnp.int32)
+    srcs, mask = lab.sample(jax.random.key(2), gdev, nodes, 8)
+    srcs, mask = np.asarray(srcs), np.asarray(mask)
+    deg = tiny_graph.degrees()[np.asarray(nodes)]
+    for i in range(64):
+        got = srcs[i][mask[i]]
+        assert len(np.unique(got)) == len(got)      # no duplicates
+        assert mask[i].sum() == min(deg[i], 8)
+
+
+def test_labor_footprint_below_rand_and_matches_numpy_estimator(tiny_graph):
+    """Fig-6-style footprint: device LABOR strictly below rand at equal
+    fanout, and consistent with the `labor_lite_epoch_footprint` numpy
+    estimator (same shared-rank top-k semantics, different rank source)."""
+    from repro.train.baselines import labor_lite_epoch_footprint
+
+    def device_mean(pol_name, n=5):
+        st = BatchStream(tiny_graph, make_policy(pol_name), 256, FANOUTS,
+                         (2048, 2048), seed=0, prefetch=False)
+        sizes = []
+        for i, b in enumerate(st.epoch()):
+            sizes.append(int(b.num_unique))
+            if i + 1 >= n:
+                break
+        return float(np.mean(sizes))
+
+    uniq_rand = device_mean("rand")
+    uniq_labor = device_mean("labor")
+    assert uniq_labor < uniq_rand
+    est = labor_lite_epoch_footprint(
+        tiny_graph, root_batches(tiny_graph, "labor", 256, seed=0)[:5],
+        FANOUTS)
+    assert 0.85 < uniq_labor / est < 1.18, (uniq_labor, est)
+
+
+def test_labor_trains_through_jit_pipeline(tiny_graph):
+    """make_policy("labor") must train through the compiled device path
+    with a finite, decreasing loss."""
+    from repro.configs.base import GNNConfig, TrainConfig
+    from repro.train.gnn_loop import GNNTrainer
+    g = tiny_graph
+    cfg = GNNConfig("t", "sage", 2, 32, g.feat_dim, g.num_classes,
+                    fanout=FANOUTS)
+    tr = GNNTrainer(g, cfg, TrainConfig(batch_size=256, max_epochs=2),
+                    make_policy("labor"), caps=(1536, 1792),
+                    eval_caps=(1536, 2048), seed=0)
+    assert tr.sampler.name == "labor"
+    losses = tr.train_steps(8)
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+
+
+def test_labor_caps_calibrate_below_rand(tiny_graph):
+    """Cap calibration keys on the bound sampler: LABOR's input-level cap
+    must come out at or below rand's."""
+    caps_rand = mb.calibrate_caps(tiny_graph, make_policy("rand"), 256,
+                                  FANOUTS, n_probe=4)
+    caps_labor = mb.calibrate_caps(tiny_graph, make_policy("labor"), 256,
+                                   FANOUTS, n_probe=4)
+    assert caps_labor[-1] <= caps_rand[-1]
+
+
+def test_calibrator_cache_key_covers_sampler(tiny_graph):
+    from repro.batching import CapsCalibrator
+    cal = CapsCalibrator()
+    k_rand = cal.key(tiny_graph, make_policy("rand"), 256, FANOUTS)
+    k_labor = cal.key(tiny_graph, make_policy("labor"), 256, FANOUTS)
+    assert k_rand != k_labor
+    assert "labor" in k_labor
+
+
+# ---------------------------------------------------------------------------
+# full-neighborhood sampler (mode="all" retirement)
+# ---------------------------------------------------------------------------
+def test_full_sampler_enumerates_all_neighbors(gdev, tiny_graph):
+    g = tiny_graph
+    u = int(g.train_ids[0])
+    deg = int(g.degrees()[u])
+    srcs, mask = sampling.FullNeighborhoodSampler().sample(
+        jax.random.key(0), gdev, jnp.asarray([u], jnp.int32), deg + 4)
+    got = set(np.asarray(srcs)[0][np.asarray(mask)[0]].tolist())
+    assert got == set(g.indices[g.indptr[u]:g.indptr[u + 1]].tolist())
+    assert int(np.asarray(mask).sum()) == deg
+
+
+# ---------------------------------------------------------------------------
+# satellites: vectorized reorder + bucketed ClusterGCN
+# ---------------------------------------------------------------------------
+def test_reorder_vectorized_matches_loop_reference(tiny_graph):
+    from repro.graphs.csr import reorder
+    g = tiny_graph
+    rng = np.random.default_rng(9)
+    perm = rng.permutation(g.num_nodes)
+    out = reorder(g, perm)
+    # per-node loop reference (the old implementation)
+    perm_inv = np.empty(g.num_nodes, np.int64)
+    perm_inv[perm] = np.arange(g.num_nodes)
+    ref = np.empty_like(g.indices)
+    new_indptr = np.zeros(g.num_nodes + 1, np.int64)
+    np.cumsum(g.degrees()[perm], out=new_indptr[1:])
+    for i in range(g.num_nodes):
+        s, e = g.indptr[perm[i]], g.indptr[perm[i] + 1]
+        ref[new_indptr[i]:new_indptr[i + 1]] = perm_inv[g.indices[s:e]]
+    np.testing.assert_array_equal(out.indptr, new_indptr)
+    np.testing.assert_array_equal(out.indices, ref)
+    np.testing.assert_array_equal(out.features, g.features[perm])
+
+
+def test_clustergcn_bucketed_groups_match_isin_reference(tiny_graph):
+    from repro.batching.policy import ClusterGCNPolicy
+    g = tiny_graph
+    pol = ClusterGCNPolicy(parts_per_batch=3)
+    # member_groups vs the old O(C*N) np.isin implementation
+    got = pol.member_groups(g.communities, np.random.default_rng(4))
+    want = [np.where(np.isin(g.communities, u))[0]
+            for u in pol.community_order(g.communities,
+                                         np.random.default_rng(4))]
+    assert len(got) == len(want)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b)
+    # epoch_order vs the old membership-mask implementation
+    got_o = pol.epoch_order(g.train_ids, g.communities,
+                            np.random.default_rng(5))
+    member = np.zeros(int(g.communities.max()) + 1, bool)
+    parts = []
+    for u in pol.community_order(g.communities, np.random.default_rng(5)):
+        member[:] = False
+        member[u] = True
+        parts.append(g.train_ids[member[g.communities[g.train_ids]]])
+    np.testing.assert_array_equal(got_o, np.concatenate(parts))
