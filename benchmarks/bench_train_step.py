@@ -26,7 +26,7 @@ def _pre_gather_in_jaxpr(tr: GNNTrainer, batch) -> bool:
     feat = int(tr.feats.shape[1])
     jaxpr = jax.make_jaxpr(tr.train_step)(
         tr.params, tr.opt_state, batch, tr.feats, tr.degrees, 1e-3,
-        jax.random.key(0))
+        jax.random.key(0), tr.cache)
     return f"f32[{cap_l},{feat}]" in str(jaxpr)
 
 
@@ -45,9 +45,9 @@ def main(full: bool = False):
             batch = next(iter(tr.stream))
             us_train = timer_us(tr.train_step, tr.params, tr.opt_state,
                                 batch, tr.feats, tr.degrees, 1e-3,
-                                jax.random.key(0))
+                                jax.random.key(0), tr.cache)
             us_eval = timer_us(tr.eval_step, tr.params, batch, tr.feats,
-                               tr.degrees)
+                               tr.degrees, tr.cache)
             pre = _pre_gather_in_jaxpr(tr, batch)
             cap_l = int(batch.node_ids.shape[0])
             emit(f"train_step/{model}/{impl}", us_train,

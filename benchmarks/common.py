@@ -68,20 +68,47 @@ def emit(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}")
 
 
-BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "BENCH_kernels.json")
+def measured_static_miss(plan, stream) -> dict:
+    """Replay a host access stream through the DEVICE hit counters of a
+    `repro.featcache.CachePlan` — the measured (not simulated) numbers
+    fig9/fig10 report next to the LRU simulation.
+
+    Returns {"miss_rate", "miss_per_batch"}. miss_per_batch (missed rows
+    per batch = feature rows actually fetched from the global matrix) is
+    the HBM-traffic quantity behind the paper's Fig-10 speedups and the
+    one the drivers assert orderings on: the per-ACCESS rate divides by
+    each policy's own footprint, normalizing away exactly the working-set
+    reduction COMM-RAND exists to create."""
+    import jax.numpy as jnp
+
+    from repro import featcache
+    h = m = nb = 0
+    for ids in stream:
+        hh, mm = featcache.cache_stats(
+            plan.pos, jnp.asarray(ids, jnp.int32), plan.pos.shape[0])
+        h += int(hh)
+        m += int(mm)
+        nb += 1
+    return {"miss_rate": 1.0 - h / max(h + m, 1),
+            "miss_per_batch": m / max(nb, 1)}
 
 
-def write_bench_json(entries: dict) -> None:
-    """Merge `entries` into BENCH_kernels.json at the repo root — the
-    machine-readable kernel-perf trajectory future PRs diff against.
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_REPO_ROOT, "BENCH_kernels.json")
+BENCH_CACHE_JSON = os.path.join(_REPO_ROOT, "BENCH_cache.json")
+
+
+def write_bench_json(entries: dict, path: str = BENCH_JSON) -> None:
+    """Merge `entries` into a machine-readable bench artifact at the repo
+    root (BENCH_kernels.json by default; fig9/fig10 target
+    BENCH_cache.json) — the perf trajectory future PRs diff against.
     Existing keys from other bench drivers are preserved."""
     import json
 
     import jax
     data = {}
-    if os.path.exists(BENCH_JSON):
-        with open(BENCH_JSON) as f:
+    if os.path.exists(path):
+        with open(path) as f:
             data = json.load(f)
     data.update(entries)
     data["_meta"] = {"backend": jax.default_backend(),
@@ -89,6 +116,6 @@ def write_bench_json(entries: dict) -> None:
                      "note": "off-TPU, pallas runs in interpret mode: "
                              "us timings there are shape-validation only; "
                              "compare the analytic hbm_bytes"}
-    with open(BENCH_JSON, "w") as f:
+    with open(path, "w") as f:
         json.dump(data, f, indent=1, sort_keys=True)
         f.write("\n")

@@ -38,6 +38,13 @@ def main():
                     help="steps between checkpoints (with --ckpt-dir)")
     ap.add_argument("--caps-cache", default=None,
                     help="JSON file memoizing calibrated caps across runs")
+    ap.add_argument("--cache", default=None,
+                    choices=["degree_hot", "community_freq",
+                             "presampled_freq"],
+                    help="device-resident feature cache admission policy "
+                         "(repro.featcache) — hit rates print per epoch")
+    ap.add_argument("--cache-frac", type=float, default=0.2,
+                    help="cache capacity as a fraction of N (with --cache)")
     args = ap.parse_args()
 
     g = prepare(synthetic.load(args.dataset),
@@ -50,9 +57,11 @@ def main():
     print(f"policy: {pol.describe()}  graph: {g.name} ({g.num_nodes} nodes)")
     tr = GNNTrainer(g, cfg, tcfg, pol, seed=0, ckpt_dir=args.ckpt_dir,
                     ckpt_every=args.ckpt_every,
-                    calibrator=CapsCalibrator(cache_path=args.caps_cache)
-                    ).warmup()
+                    calibrator=CapsCalibrator(cache_path=args.caps_cache),
+                    cache=args.cache, cache_frac=args.cache_frac).warmup()
     print(f"calibrated caps: {tr.caps}")
+    if tr.cache is not None:
+        print(f"feature cache: {tr.cache.describe()}")
     if tr.global_step:
         print(f"resumed at step {tr.global_step} "
               f"(cursor: {tr.stream.cursor.state()})")
@@ -60,7 +69,8 @@ def main():
     print(f"\nbest val_acc={res.val_acc:.4f} test_acc={res.test_acc:.4f} "
           f"epochs={res.epochs_to_converge} "
           f"per_epoch={res.per_epoch_time_s:.2f}s "
-          f"total={res.total_time_s:.1f}s")
+          f"total={res.total_time_s:.1f}s"
+          + (f" cache_hit={res.cache_hit_rate:.3f}" if res.cache else ""))
 
 
 if __name__ == "__main__":

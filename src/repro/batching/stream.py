@@ -20,6 +20,11 @@ the sampler rides into the jit-compiled builder as a static argument.
 Prefetch: while the consumer runs step i, the builder for batch i+1 has
 already been dispatched (jit dispatch is async), overlapping host batch
 assembly + host->device transfer with device compute.
+
+Feature cache: `cache=` attaches a `repro.featcache.CachePlan` (or builds
+one from an admission-policy name against this stream's policy/shape) to
+the stream; consumers route layer-0 feature reads through it
+(`gather_cached`) and measure hit rates.
 """
 from __future__ import annotations
 
@@ -60,7 +65,7 @@ class BatchStream:
                  mode: str = "sample",
                  device_graph: Optional[DeviceGraph] = None,
                  labels: Optional[jnp.ndarray] = None,
-                 prefetch: bool = True):
+                 prefetch: bool = True, cache=None):
         self.graph = graph
         self.policy: BatchPolicy = as_policy(policy)
         self.batch_size = batch_size
@@ -73,6 +78,16 @@ class BatchStream:
         # the deprecated string knob for the full-neighborhood sampler
         self.sampler = sampling.resolve(
             sampler, mode, lambda: sampling.for_policy(self.policy))
+        # the device feature cache riding with the stream: a
+        # `repro.featcache.CachePlan` (or admission-policy name, built here
+        # against this stream's policy/shape) that consumers gather layer-0
+        # features through — `GNNTrainer` reads it back off the stream
+        self.cache = None
+        if cache is not None:
+            from repro import featcache
+            self.cache = featcache.as_plan(
+                cache, graph, policy=self.policy, batch_size=batch_size,
+                fanouts=self.fanouts, seed=seed)
         self.prefetch = prefetch
         self.g = device_graph or DeviceGraph.from_graph(graph)
         self.labels = labels if labels is not None \

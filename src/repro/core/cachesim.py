@@ -1,55 +1,35 @@
-"""LRU software-cache simulator (paper §6.5.1/§6.5.2 analogue).
+"""DEPRECATED — cache simulation moved to `repro.featcache.sim`.
 
-The paper measures a DGL GPU-resident feature cache (UVA path) and MIG-cut
-L2 capacities; neither exists on TPU, so we *model* the cache: replay the
-exact per-batch feature-access streams produced by each policy through an
-LRU of a given capacity and report miss rates. The paper's numbers to match
-qualitatively: baseline 35.46% vs COMM-RAND-MIX-{50..0}% = 20.99/11.39/
-6.22/6.21% (Fig 9), and growing speedups as capacity shrinks (Fig 10).
+The LRU replay this module used to implement is now part of the
+device-resident feature-cache subsystem (`repro.featcache`): the simulator
+gained a vectorized stack-distance implementation plus a CLOCK variant,
+and the static cache it used to stand in for actually exists
+(`featcache.CachePlan` + the `gather_cached` kernel). The shims below
+delegate (the vectorized `lru_miss_rate` is exactly loop-equivalent) and
+will be removed once external callers migrate.
 """
 from __future__ import annotations
 
-from collections import OrderedDict
-from typing import Iterable, List
+import warnings
 
-import numpy as np
+from repro.featcache import sim as _sim
 
 
-def lru_miss_rate(batches: Iterable[np.ndarray], capacity: int) -> float:
-    """batches: per-batch arrays of accessed node ids (already deduped)."""
-    cache: OrderedDict = OrderedDict()
-    hits = 0
-    total = 0
-    for ids in batches:
-        for u in np.asarray(ids):
-            u = int(u)
-            total += 1
-            if u in cache:
-                cache.move_to_end(u)
-                hits += 1
-            else:
-                cache[u] = True
-                if len(cache) > capacity:
-                    cache.popitem(last=False)
-    return 1.0 - hits / max(total, 1)
+def _warn(name: str) -> None:
+    warnings.warn(
+        f"repro.core.cachesim.{name} is deprecated; use "
+        f"repro.featcache.sim.{name}", DeprecationWarning, stacklevel=3)
+
+
+def lru_miss_rate(batches, capacity):
+    """Deprecated: use `repro.featcache.sim.lru_miss_rate`."""
+    _warn("lru_miss_rate")
+    return _sim.lru_miss_rate(batches, capacity)
 
 
 def policy_access_stream(graph, policy, batch_size, fanouts, n_batches=16,
-                         seed=0) -> List[np.ndarray]:
-    """Unique input-node ids per batch under `policy` (numpy builder),
-    sampled through the policy's bound sampler. The shared `ctx` spans the
-    whole stream, so LABOR's per-epoch ranks persist across batches — the
-    cross-batch repetition is exactly what an LRU cache rewards."""
-    from repro import sampling
-    from repro.core import partition
-    from repro.core.minibatch import build_batch_np
-    rng = np.random.default_rng(seed)
-    batches = partition.batches_for_epoch(
-        graph.train_ids, graph.communities, policy, batch_size, rng)
-    sampler = sampling.for_policy(policy)
-    ctx = {}
-    out = []
-    for b in batches[:n_batches]:
-        _, level = build_batch_np(rng, graph, b, fanouts, sampler, ctx=ctx)
-        out.append(level)
-    return out
+                         seed=0):
+    """Deprecated: use `repro.featcache.sim.policy_access_stream`."""
+    _warn("policy_access_stream")
+    return _sim.policy_access_stream(graph, policy, batch_size, fanouts,
+                                     n_batches=n_batches, seed=seed)

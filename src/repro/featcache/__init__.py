@@ -1,0 +1,40 @@
+"""Device-resident feature-cache subsystem (paper §6.5 as a measurement).
+
+    from repro import featcache
+
+    plan = featcache.build_plan(graph, "presampled_freq", capacity=4096,
+                                policy=policy, batch_size=512,
+                                fanouts=(10, 10))
+    out, hits, misses = featcache.gather_cached(
+        plan.cache, feats, plan.pos, ids)
+
+A `CachePlan` pins the hottest feature rows (chosen by a registered
+admission policy — `degree_hot` / `community_freq` / `presampled_freq`)
+into a compact `(C, F)` device array with an `int32[N]` position map;
+`repro.kernels.gather_cached` serves every layer-0 feature read through it
+(cache row on hit, global matrix on miss) and counts hits on device, so
+the paper's cache-locality claim becomes a measured per-epoch hit rate
+(`GNNTrainer(cache=...)`) instead of a simulation. The LRU/CLOCK
+simulators for fig9/fig10 live in `featcache.sim` (the old
+`repro.core.cachesim` location is a deprecated shim).
+"""
+from repro.featcache.plan import (AdmissionPolicy, CachePlan,   # noqa: F401
+                                  CommunityFreqAdmission, DegreeHotAdmission,
+                                  PresampledFreqAdmission, as_admission,
+                                  as_plan, available_admissions, build_plan,
+                                  cache_stats_np, make_admission,
+                                  register_admission, select_rows)
+from repro.featcache.sim import (clock_miss_rate,               # noqa: F401
+                                 lru_miss_rate, policy_access_stream,
+                                 static_miss_rate)
+from repro.kernels.gather_cached.ops import (cache_stats,       # noqa: F401
+                                             gather_cached)
+
+__all__ = [
+    "AdmissionPolicy", "CachePlan", "CommunityFreqAdmission",
+    "DegreeHotAdmission", "PresampledFreqAdmission", "as_admission",
+    "as_plan", "available_admissions", "build_plan", "cache_stats",
+    "cache_stats_np", "clock_miss_rate", "gather_cached", "lru_miss_rate",
+    "make_admission", "policy_access_stream", "register_admission",
+    "select_rows", "static_miss_rate",
+]

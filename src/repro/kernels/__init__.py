@@ -6,6 +6,10 @@ with backend/interpret dispatch and, where training needs it, a custom VJP)
 - `gather_agg`    — fused gather + per-edge-weighted reduce, the GNN
                     aggregation hot loop (forward AND backward avoid the
                     (n_dst, fanout, F) intermediate). See README §kernels.
+- `gather_cached` — two-level (cache-or-global) feature row gather for
+                    the device-resident cache (`repro.featcache`), with
+                    device-side hit/miss counters; its backward reuses
+                    `gather_agg`'s scatter-add.
 - `gather_mean`   — DEPRECATED shim over `gather_agg` (masked mean).
 - `flash_attention`, `moe_gmm`, `rwkv6_chunk` — LM-side kernels.
 """

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.configs.base import GNNConfig
 from repro.core.minibatch import MiniBatch
 from repro.kernels.gather_agg.ops import gather_agg, resolve_agg_impl
+from repro.kernels.gather_cached.ops import gather_cached
 from repro.models.lm.common import dense_init
 
 Params = Dict
@@ -148,7 +149,7 @@ def gat_layer(p, x_tab, src_idx, self_idx, edge_mask, *, impl="jnp"):
 # ---------------------------------------------------------------------------
 def apply_gnn(cfg: GNNConfig, params: Params, batch: MiniBatch, x,
               degrees=None, *, train: bool = False, dropout_key=None,
-              feats_global: bool = False):
+              feats_global: bool = False, cache=None):
     """Returns logits aligned with batch.roots order.
 
     x: the input features. With feats_global=False (legacy), x is the
@@ -158,10 +159,27 @@ def apply_gnn(cfg: GNNConfig, params: Params, batch: MiniBatch, x,
     gathers rows directly through composed `node_ids[src_pos]` indices — no
     (cap_L, in_dim) copy is ever made, so per-batch feature HBM reads equal
     the Fig-6 working-set bytes.
+
+    cache: an optional `repro.featcache.CachePlan` (requires
+    feats_global=True). Layer-0 feature reads then route through the
+    two-level `gather_cached` kernel: the (cap_L, in_dim) input level is
+    assembled once per batch, each row served from the device-resident
+    cache on hit and from the global matrix on miss. Cache rows are exact
+    copies, so outputs are bit-identical to the uncached path; the
+    trainer measures the hit rates separately (`cache_stats` on the same
+    position map). The gather backend follows `cfg.agg_impl`.
     """
     impl = resolve_agg_impl(cfg.agg_impl)
     L = len(batch.blocks)
-    if not feats_global:
+    if cache is not None:
+        if not feats_global:
+            raise ValueError("cache= requires feats_global=True "
+                             "(x must be the full (N, F) feature matrix)")
+        x, _, _ = gather_cached(cache.cache, x, cache.pos, batch.node_ids,
+                                impl=cfg.agg_impl)
+        x = x * batch.node_mask[:, None].astype(x.dtype)
+        feats_global = False
+    elif not feats_global:
         x = x * batch.node_mask[:, None].astype(x.dtype)
     elif cfg.model == "gat":
         # GAT projects every unique source row BEFORE gathering (projecting

@@ -11,6 +11,13 @@ trainer has always had). Dropout keys derive from the same (seed, epoch,
 pos) as the stream, and `fit()`'s scheduler state (lr, plateau/early-stop
 counters, best-so-far weights) is checkpointed alongside the cursor, so a
 resumed run replays the same training trajectory.
+
+Feature cache: `cache=` (a `repro.featcache.CachePlan` or admission-policy
+name) routes every layer-0 feature read through the device-resident cache
+(`gather_cached`) — a pure read-path optimization (loss trajectory is
+bit-identical) whose measured hit rate lands in each `EpochMetrics` via a
+`HitRateMeter`, turning the paper's §6.5 cache-locality claim into a
+number this trainer reports.
 """
 from __future__ import annotations
 
@@ -23,17 +30,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import sampling
+from repro import featcache, sampling
 from repro.batching import (BatchStream, CapsCalibrator, Cursor, as_policy,
                             eval_batches, make_policy)
 from repro.configs.base import GNNConfig, TrainConfig
 from repro.core import minibatch as mb
 from repro.graphs.csr import DeviceGraph, Graph
+from repro.kernels.gather_cached.ops import cache_stats
 from repro.models.gnn.models import apply_gnn, init_gnn
 from repro.optim import adamw
 from repro.optim.schedule import EarlyStopping, ReduceLROnPlateau
 from repro.train import checkpoint as ckpt
 from repro.train.losses import accuracy, gnn_softmax_ce
+from repro.train.monitor import HitRateMeter
 
 
 @dataclass
@@ -44,6 +53,7 @@ class EpochMetrics:
     val_acc: float
     epoch_time_s: float
     mean_unique_nodes: float
+    cache_hit_rate: float = 0.0     # measured (repro.featcache); 0 = no cache
 
 
 @dataclass
@@ -58,17 +68,29 @@ class TrainResult:
     feature_bytes_per_batch: float
     caps: tuple
     history: List[EpochMetrics] = field(default_factory=list)
+    cache: str = ""                 # CachePlan.describe(), "" = uncached
+    cache_hit_rate: float = 0.0     # measured over the whole run
+
+
+def _batch_cache_stats(cache, batch: mb.MiniBatch):
+    """Device (hits, misses) for this batch's layer-0 reads — the same
+    counters `gather_cached` computes inside `apply_gnn`."""
+    if cache is None:
+        return jnp.int32(0), jnp.int32(0)
+    return cache_stats(cache.pos, batch.node_ids, cache.pos.shape[0])
 
 
 def _make_steps(cfg: GNNConfig, tcfg: TrainConfig):
     @functools.partial(jax.jit, static_argnames=())
     def train_step(params, opt_state, batch: mb.MiniBatch, feats, degrees,
-                   lr, key):
+                   lr, key, cache):
         def loss_fn(p):
             # no (cap_L, F) pre-gather: layer 0 reads feature rows straight
-            # from the global matrix through the fused gather-agg path
+            # from the global matrix through the fused gather-agg path —
+            # or, with a cache plan, through the two-level gather_cached
             logits = apply_gnn(cfg, p, batch, feats, degrees, train=True,
-                               dropout_key=key, feats_global=True)
+                               dropout_key=key, feats_global=True,
+                               cache=cache)
             return gnn_softmax_ce(logits, batch.labels,
                                   batch.label_mask.astype(jnp.float32))
 
@@ -76,12 +98,13 @@ def _make_steps(cfg: GNNConfig, tcfg: TrainConfig):
         new_params, new_opt = adamw.update(
             grads, opt_state, params, lr=lr,
             weight_decay=tcfg.weight_decay)
-        return new_params, new_opt, loss
+        hits, misses = _batch_cache_stats(cache, batch)
+        return new_params, new_opt, loss, hits, misses
 
     @jax.jit
-    def eval_step(params, batch: mb.MiniBatch, feats, degrees):
+    def eval_step(params, batch: mb.MiniBatch, feats, degrees, cache):
         logits = apply_gnn(cfg, params, batch, feats, degrees, train=False,
-                           feats_global=True)
+                           feats_global=True, cache=cache)
         m = batch.label_mask.astype(jnp.float32)
         return (gnn_softmax_ce(logits, batch.labels, m),
                 accuracy(logits, batch.labels, m), m.sum())
@@ -95,7 +118,9 @@ class GNNTrainer:
     def __init__(self, graph: Graph, cfg: GNNConfig, tcfg: TrainConfig,
                  policy, caps=None, eval_caps=None, seed: int = 0,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
-                 calibrator: Optional[CapsCalibrator] = None):
+                 calibrator: Optional[CapsCalibrator] = None,
+                 cache=None, cache_capacity: Optional[int] = None,
+                 cache_frac: float = 0.2):
         self.graph = graph
         self.cfg = cfg
         self.tcfg = tcfg
@@ -124,9 +149,19 @@ class GNNTrainer:
         self.train_step, self.eval_step = _make_steps(cfg, tcfg)
         self.params = init_gnn(cfg, jax.random.key(seed))
         self.opt_state = adamw.init(self.params)
+        # `cache` is a CachePlan or an admission-policy name (built here
+        # against THIS policy's access distribution); it rides on the
+        # stream and every step gathers layer-0 features through it
+        self.cache = featcache.as_plan(
+            cache, graph, capacity=cache_capacity, frac=cache_frac,
+            policy=self.policy, batch_size=tcfg.batch_size,
+            fanouts=self.fanouts, seed=seed)
+        self.cache_meter = HitRateMeter()
+        self._pending_stats = []      # device counters, synced per epoch
         self.stream = BatchStream(
             graph, self.policy, tcfg.batch_size, self.fanouts, self.caps,
-            seed=seed, device_graph=self.g, labels=self.labels)
+            seed=seed, device_graph=self.g, labels=self.labels,
+            cache=self.cache)
         self.global_step = 0
         self._best_params = None      # best-val weights seen by fit()
         self._fit_state = None        # lr / plateau / early-stop counters
@@ -175,30 +210,42 @@ class GNNTrainer:
         b = mb.build_batch(jax.random.key(0), self.g,
                            jnp.asarray(roots, jnp.int32), self.labels,
                            self.fanouts, self.caps, self.sampler)
-        self.params, self.opt_state, _ = self.train_step(
+        self.params, self.opt_state, _, _, _ = self.train_step(
             self.params, self.opt_state, b, self.feats, self.degrees,
-            0.0, jax.random.key(0))
+            0.0, jax.random.key(0), self.cache)
         be = mb.build_batch(jax.random.key(0), self.g,
                             jnp.asarray(roots, jnp.int32), self.labels,
                             self.fanouts, self.eval_caps,
                             self.eval_sampler)
-        self.eval_step(self.params, be, self.feats, self.degrees)
+        self.eval_step(self.params, be, self.feats, self.degrees,
+                       self.cache)
         self.params, self.opt_state = saved
         return self
 
     def _train_one(self, batch: mb.MiniBatch, lr: float):
-        self.params, self.opt_state, loss = self.train_step(
+        self.params, self.opt_state, loss, hits, misses = self.train_step(
             self.params, self.opt_state, batch, self.feats, self.degrees,
-            lr, self._dropout_key())
+            lr, self._dropout_key(), self.cache)
+        if self.cache is not None:
+            # keep the device counters un-synced: a float()/int() here
+            # would serialize away the stream's prefetch overlap
+            self._pending_stats.append((hits, misses))
         self.global_step += 1
         if self.ckpt_dir and self.ckpt_every and \
                 self.global_step % self.ckpt_every == 0:
             self.save()
         return loss
 
+    def _flush_cache_stats(self) -> None:
+        """Sync pending per-batch counters into the hit-rate meter."""
+        for h, m in self._pending_stats:
+            self.cache_meter.observe(h, m)
+        self._pending_stats = []
+
     def run_epoch(self, lr: float) -> Dict:
         """Consume the remainder of the stream's current epoch."""
         t0 = time.perf_counter()
+        mark = self.cache_meter.mark()
         losses, uniq = [], []
         for batch in self.stream.epoch():
             losses.append(self._train_one(batch, lr))
@@ -206,11 +253,13 @@ class GNNTrainer:
         if losses:
             jax.block_until_ready(losses[-1])
         dt = time.perf_counter() - t0
+        self._flush_cache_stats()
         if not losses:          # resumed exactly on an epoch boundary
-            return {"loss": 0.0, "time": dt, "uniq": 0.0}
+            return {"loss": 0.0, "time": dt, "uniq": 0.0, "cache_hit": 0.0}
         return {"loss": float(np.mean([float(l) for l in losses])),
                 "time": dt,
-                "uniq": float(np.mean([float(u) for u in uniq]))}
+                "uniq": float(np.mean([float(u) for u in uniq])),
+                "cache_hit": self.cache_meter.rate_since(mark)}
 
     def train_steps(self, n: int, lr: Optional[float] = None) -> List[float]:
         """Consume exactly `n` batches (crossing epoch boundaries)."""
@@ -219,6 +268,7 @@ class GNNTrainer:
         # keep losses on device until the end: a float() per step would
         # sync every batch and serialize away the stream's prefetch overlap
         losses = [self._train_one(next(it), lr) for _ in range(n)]
+        self._flush_cache_stats()
         return [float(l) for l in losses]
 
     def evaluate(self, ids: np.ndarray) -> Dict:
@@ -229,7 +279,7 @@ class GNNTrainer:
                 seed=self.seed + 17,
                 device_graph=self.g, labels=self.labels):
             l, a, n = self.eval_step(self.params, batch, self.feats,
-                                     self.degrees)
+                                     self.degrees, self.cache)
             n = float(n)
             tot_l += float(l) * n
             tot_a += float(a) * n
@@ -262,11 +312,13 @@ class GNNTrainer:
             em = self.run_epoch(lr)
             ev = self.evaluate(self.graph.val_ids)
             history.append(EpochMetrics(epoch, em["loss"], ev["loss"],
-                                        ev["acc"], em["time"], em["uniq"]))
+                                        ev["acc"], em["time"], em["uniq"],
+                                        em["cache_hit"]))
             if verbose:
                 print(f"  epoch {epoch:3d} loss={em['loss']:.4f} "
                       f"val={ev['acc']:.4f} t={em['time']:.2f}s "
-                      f"uniq={em['uniq']:.0f}")
+                      f"uniq={em['uniq']:.0f} "
+                      f"cache_hit={em['cache_hit']:.3f}")
             if ev["acc"] > best_val_acc:
                 best_val_acc = ev["acc"]
                 best_params = jax.tree.map(lambda x: x, self.params)
@@ -304,13 +356,17 @@ class GNNTrainer:
             * self.graph.feat_dim * 4,
             caps=self.caps,
             history=history,
+            cache=self.cache.describe() if self.cache is not None else "",
+            cache_hit_rate=self.cache_meter.hit_rate,
         )
 
 
 def train_once(graph: Graph, cfg: GNNConfig, policy,
                tcfg: Optional[TrainConfig] = None, seed: int = 0,
                verbose: bool = False,
-               calibrator: Optional[CapsCalibrator] = None) -> TrainResult:
+               calibrator: Optional[CapsCalibrator] = None,
+               cache=None) -> TrainResult:
     tcfg = tcfg or TrainConfig()
     return GNNTrainer(graph, cfg, tcfg, policy, seed=seed,
-                      calibrator=calibrator).warmup().fit(verbose)
+                      calibrator=calibrator,
+                      cache=cache).warmup().fit(verbose)

@@ -5,6 +5,8 @@ thermal throttling) and (b) transient device errors. The monitor keeps an
 EMA of step time and flags outliers; `resilient_step` retries a step
 function and escalates to a checkpoint-restore callback after repeated
 failures (tested by fault injection in tests/test_fault_tolerance.py).
+`HitRateMeter` accumulates the feature-cache hit/miss counters the GNN
+trainer measures per batch (`repro.featcache`) into per-epoch hit rates.
 """
 from __future__ import annotations
 
@@ -39,6 +41,38 @@ class StragglerMonitor:
     @property
     def straggler_fraction(self) -> float:
         return len(self.events) / max(self.count - self.warmup, 1)
+
+
+@dataclass
+class HitRateMeter:
+    """Feature-cache hit/miss accumulator (`repro.featcache`).
+
+    The trainer feeds it the device counters `gather_cached` mirrors
+    (one observe per batch, after the end-of-epoch sync so metrics never
+    force an extra host round-trip); `mark()`/`rate_since` carve the
+    running totals into per-epoch windows."""
+    hits: int = 0
+    misses: int = 0
+
+    def observe(self, hits, misses) -> None:
+        self.hits += int(hits)
+        self.misses += int(misses)
+
+    @property
+    def total(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.total, 1)
+
+    def mark(self):
+        """Window marker: pass the result to `rate_since` later."""
+        return (self.hits, self.misses)
+
+    def rate_since(self, mark) -> float:
+        h0, m0 = mark
+        return (self.hits - h0) / max(self.total - h0 - m0, 1)
 
 
 class StepFailure(RuntimeError):

@@ -1,0 +1,288 @@
+"""Device-resident feature cache (`repro.featcache`): admission plans,
+the two-level `gather_cached` kernel, the vectorized LRU simulator, and
+the trainer's measured hit rates."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import featcache
+from repro.featcache.sim import _lru_miss_rate_ref
+from repro.kernels.gather_cached.ops import (cache_stats, gather_cached,
+                                             resolve_cache_impl)
+from repro.kernels.gather_cached.ref import gather_cached_ref
+
+
+def _random_plan(rng, N, F, C):
+    feats = jnp.asarray(rng.normal(size=(N, F)), jnp.float32)
+    ids = np.sort(rng.choice(N, size=C, replace=False))
+    pos = np.full(N, -1, np.int32)
+    pos[ids] = np.arange(C, dtype=np.int32)
+    return feats, feats[jnp.asarray(ids)], jnp.asarray(pos), ids
+
+
+# ---------------------------------------------------------------------------
+# gather_cached: jnp <-> pallas fwd/bwd equivalence
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([16, 50, 200]), c=st.sampled_from([1, 7, 40]),
+       m=st.sampled_from([4, 33, 128]), f=st.sampled_from([8, 64, 128]),
+       seed=st.integers(0, 20))
+def test_gather_cached_matches_ref(n, c, m, f, seed):
+    rng = np.random.default_rng(seed)
+    c = min(c, n)
+    feats, cache, pos, _ = _random_plan(rng, n, f, c)
+    # include padded (>= n) entries: served from a clipped row, not counted
+    ids = jnp.asarray(np.where(rng.random(m) < 0.15, n,
+                               rng.integers(0, n, m)), jnp.int32)
+    out_j, h_j, m_j = gather_cached(cache, feats, pos, ids, impl="jnp")
+    out_p, h_p, m_p = gather_cached(cache, feats, pos, ids, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_j))
+    assert (int(h_p), int(m_p)) == (int(h_j), int(m_j))
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.sampled_from([20, 80]), c=st.sampled_from([5, 30]),
+       m=st.sampled_from([7, 40]), f=st.sampled_from([16, 64]),
+       seed=st.integers(0, 20))
+def test_gather_cached_grads_match_ref(n, c, m, f, seed):
+    """Backward (two fanout-1 scatter-adds) vs autodiff of the jnp ref."""
+    rng = np.random.default_rng(seed)
+    c = min(c, n)
+    feats, cache, pos, _ = _random_plan(rng, n, f, c)
+    ids = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+    cot = jnp.asarray(rng.normal(size=(m, f)), jnp.float32)
+
+    def grads(impl):
+        return jax.grad(
+            lambda ca, fe: (gather_cached(ca, fe, pos, ids,
+                                          impl=impl)[0] * cot).sum(),
+            argnums=(0, 1))(cache, feats)
+
+    (dcp, dfp), (dcj, dfj) = grads("pallas"), grads("jnp")
+    np.testing.assert_allclose(np.asarray(dcp), np.asarray(dcj),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dfp), np.asarray(dfj),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("edge", ["all_hit", "all_miss"])
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_gather_cached_hit_miss_edges(edge, impl):
+    rng = np.random.default_rng(3)
+    N, F, M = 24, 32, 17
+    feats = jnp.asarray(rng.normal(size=(N, F)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, N, M), jnp.int32)
+    if edge == "all_hit":
+        cache, pos = feats, jnp.arange(N, dtype=jnp.int32)
+    else:
+        cache, pos = feats[:1], jnp.full((N,), -1, jnp.int32)
+    cot = jnp.asarray(rng.normal(size=(M, F)), jnp.float32)
+    out, h, m = gather_cached(cache, feats, pos, ids, impl=impl)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(feats)[ids])
+    assert (int(h), int(m)) == ((M, 0) if edge == "all_hit" else (0, M))
+    dc, df = jax.grad(
+        lambda ca, fe: (gather_cached(ca, fe, pos, ids,
+                                      impl=impl)[0] * cot).sum(),
+        argnums=(0, 1))(cache, feats)
+    tot = np.zeros((N, F), np.float32)
+    np.add.at(tot, np.asarray(ids), np.asarray(cot))
+    hot, cold = (dc, df) if edge == "all_hit" else (df, dc)
+    np.testing.assert_allclose(np.asarray(hot), tot, rtol=1e-5, atol=1e-5)
+    assert float(jnp.abs(cold).max()) == 0.0
+
+
+def test_resolve_cache_impl():
+    assert resolve_cache_impl("jnp") == "jnp"
+    assert resolve_cache_impl("pallas") == "pallas"
+    assert resolve_cache_impl("auto") == "jnp"   # CPU suite
+    with pytest.raises(ValueError):
+        resolve_cache_impl("nope")
+
+
+# ---------------------------------------------------------------------------
+# admission plans: device counters bit-match the numpy mirror
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("admission", featcache.available_admissions())
+def test_plan_counters_match_numpy_mirror(tiny_graph, admission):
+    from repro.batching import make_policy
+    g = tiny_graph
+    pol = make_policy("comm_rand", mix=0.0, p=1.0)
+    plan = featcache.build_plan(g, admission, capacity=300, policy=pol,
+                                batch_size=128, fanouts=(4, 4), seed=0)
+    assert plan.capacity == 300
+    ids = plan.cached_ids()
+    assert len(ids) == 300 and len(np.unique(ids)) == 300
+    # cache rows are exact copies of the admitted feature rows
+    np.testing.assert_array_equal(np.asarray(plan.cache),
+                                  g.features[ids].astype(np.float32))
+    stream = featcache.policy_access_stream(g, pol, 128, (4, 4),
+                                            n_batches=4, seed=7)
+    for batch_ids in stream:
+        dev = cache_stats(plan.pos, jnp.asarray(batch_ids, jnp.int32),
+                          g.num_nodes)
+        np_hits, np_misses = featcache.cache_stats_np(
+            np.asarray(plan.pos), batch_ids, g.num_nodes)
+        assert (int(dev[0]), int(dev[1])) == (np_hits, np_misses)
+        # and gather_cached's own counters are the same numbers
+        _, h2, m2 = gather_cached(plan.cache, jnp.asarray(g.features),
+                                  plan.pos, jnp.asarray(batch_ids,
+                                                        jnp.int32))
+        assert (int(h2), int(m2)) == (np_hits, np_misses)
+
+
+def test_admission_policies_rank_differently(tiny_graph):
+    """degree_hot ignores structure; community_freq must not (the tiny
+    graph has communities of very different training mass)."""
+    g = tiny_graph
+    deg = featcache.make_admission("degree_hot").scores(g, {})
+    com = featcache.make_admission("community_freq").scores(g, {})
+    assert not np.array_equal(featcache.select_rows(deg, 200),
+                              featcache.select_rows(com, 200))
+
+
+# ---------------------------------------------------------------------------
+# apply_gnn: cache on == cache off, for every model, both impls
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("model", ["sage", "gcn", "gat"])
+@pytest.mark.parametrize("impl", ["jnp", "pallas"])
+def test_apply_gnn_cache_is_pure_read_path(tiny_graph, model, impl):
+    from repro.configs.base import GNNConfig
+    from repro.core import minibatch as mb
+    from repro.graphs.csr import DeviceGraph
+    from repro.models.gnn.models import apply_gnn, init_gnn
+
+    g = tiny_graph
+    gdev = DeviceGraph.from_graph(g)
+    feats = jnp.asarray(g.features)
+    cfg = GNNConfig("t", model, 2, 32, g.feat_dim, g.num_classes,
+                    fanout=(4, 4), dropout=0.0, agg_impl=impl)
+    params = init_gnn(cfg, jax.random.key(1))
+    batch = mb.build_batch(jax.random.key(2), gdev,
+                           jnp.asarray(g.train_ids[:32], jnp.int32),
+                           jnp.asarray(g.labels), (4, 4), (256, 384), 0.9)
+    plan = featcache.build_plan(g, "degree_hot", capacity=500)
+    out = apply_gnn(cfg, params, batch, feats, gdev.degrees,
+                    feats_global=True)
+    out_c = apply_gnn(cfg, params, batch, feats, gdev.degrees,
+                      feats_global=True, cache=plan)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out))
+
+
+def test_apply_gnn_cache_requires_feats_global(tiny_graph):
+    from repro.configs.base import GNNConfig
+    from repro.core import minibatch as mb
+    from repro.graphs.csr import DeviceGraph
+    from repro.models.gnn.models import apply_gnn, init_gnn
+
+    g = tiny_graph
+    gdev = DeviceGraph.from_graph(g)
+    cfg = GNNConfig("t", "sage", 2, 32, g.feat_dim, g.num_classes,
+                    fanout=(4, 4), dropout=0.0, agg_impl="jnp")
+    params = init_gnn(cfg, jax.random.key(1))
+    batch = mb.build_batch(jax.random.key(2), gdev,
+                           jnp.asarray(g.train_ids[:8], jnp.int32),
+                           jnp.asarray(g.labels), (4, 4), (256, 384), 0.9)
+    plan = featcache.build_plan(g, "degree_hot", capacity=100)
+    with pytest.raises(ValueError, match="feats_global"):
+        apply_gnn(cfg, params, batch,
+                  jnp.asarray(g.features)[batch.node_ids], gdev.degrees,
+                  cache=plan)
+
+
+# ---------------------------------------------------------------------------
+# trainer: cache is a pure read-path optimization with measured hit rates
+# ---------------------------------------------------------------------------
+def test_trainer_cache_bit_identical_with_hit_rates(tiny_graph):
+    from repro.batching import CapsCalibrator
+    from repro.configs.base import GNNConfig, TrainConfig
+    from repro.train.gnn_loop import GNNTrainer
+
+    g = tiny_graph
+    cfg = GNNConfig("t", "sage", 2, 32, g.feat_dim, g.num_classes,
+                    fanout=(4, 4), dropout=0.5)
+    tcfg = TrainConfig(batch_size=64, max_epochs=2)
+    cal = CapsCalibrator(seed=0)
+    t0 = GNNTrainer(g, cfg, tcfg, "comm_rand", seed=0, calibrator=cal)
+    t1 = GNNTrainer(g, cfg, tcfg, "comm_rand", seed=0, calibrator=cal,
+                    cache="presampled_freq", cache_frac=0.3)
+    assert t0.cache is None and t1.cache is not None
+    assert t1.stream.cache is t1.cache        # plumbing rides the stream
+    l0, l1 = t0.train_steps(20), t1.train_steps(20)
+    assert l0 == l1                           # bit-identical trajectory
+    assert t1.cache_meter.total > 0
+    assert 0.0 < t1.cache_meter.hit_rate < 1.0
+    assert t0.cache_meter.total == 0
+    # the meter's accumulated device counters bit-match the numpy mirror
+    # replayed over an identical stream (same seed/policy/caps -> same
+    # compiled batches)
+    from repro.batching import BatchStream
+    replay = BatchStream(g, t1.policy, tcfg.batch_size, t1.fanouts,
+                         t1.caps, seed=0, device_graph=t1.g,
+                         labels=t1.labels)
+    it = iter(replay)
+    exp_h = exp_m = 0
+    for _ in range(20):
+        bh, bm = featcache.cache_stats_np(
+            np.asarray(t1.cache.pos), np.asarray(next(it).node_ids),
+            g.num_nodes)
+        exp_h += bh
+        exp_m += bm
+    assert (t1.cache_meter.hits, t1.cache_meter.misses) == (exp_h, exp_m)
+    em = t1.run_epoch(1e-3)                   # per-epoch rate in metrics
+    assert 0.0 <= em["cache_hit"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# simulator: vectorized LRU == OrderedDict loop, CLOCK sanity
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), cap=st.integers(1, 64),
+       dedup=st.booleans())
+def test_lru_vectorized_matches_loop(seed, cap, dedup):
+    rng = np.random.default_rng(seed)
+    if dedup:   # the contract: per-batch arrays of already-deduped ids
+        batches = [rng.choice(60, size=rng.integers(0, 40), replace=False)
+                   for _ in range(rng.integers(1, 6))]
+    else:       # robustness: intra-batch duplicates must still match
+        batches = [rng.integers(0, 25, size=rng.integers(0, 50))
+                   for _ in range(rng.integers(1, 5))]
+    assert featcache.lru_miss_rate(batches, cap) == \
+        _lru_miss_rate_ref(batches, cap)
+
+
+def test_lru_empty_stream():
+    assert featcache.lru_miss_rate([], 4) == 1.0
+    assert featcache.lru_miss_rate([np.array([], np.int64)], 4) == 1.0
+
+
+def test_clock_approximates_lru():
+    """Sequential sweeps: CLOCK and LRU agree exactly (no reuse to
+    second-chance); a hot-id stream hits under both."""
+    sweeps = [np.arange(16) for _ in range(3)]
+    assert featcache.clock_miss_rate(sweeps, 8) == \
+        featcache.lru_miss_rate(sweeps, 8) == 1.0
+    hot = [np.array([1, 2, 3])] * 8
+    assert featcache.clock_miss_rate(hot, 4) == \
+        featcache.lru_miss_rate(hot, 4) == pytest.approx(3 / 24)
+
+
+def test_static_miss_rate():
+    batches = [np.array([0, 1, 2, 3]), np.array([2, 3, 4, 5])]
+    assert featcache.static_miss_rate(batches, np.array([2, 3])) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# deprecated shim
+# ---------------------------------------------------------------------------
+def test_core_cachesim_shim_warns_and_delegates():
+    from repro.core import cachesim
+    batches = [np.array([1, 2, 3]), np.array([2, 3, 4])]
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = cachesim.lru_miss_rate(batches, 8)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert out == featcache.lru_miss_rate(batches, 8)
