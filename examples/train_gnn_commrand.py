@@ -40,9 +40,14 @@ def main():
                     help="JSON file memoizing calibrated caps across runs")
     ap.add_argument("--cache", default=None,
                     choices=["degree_hot", "community_freq",
-                             "presampled_freq"],
-                    help="device-resident feature cache admission policy "
-                         "(repro.featcache) — hit rates print per epoch")
+                             "presampled_freq", "dynamic",
+                             "dynamic:degree_hot", "dynamic:community_freq",
+                             "dynamic:presampled_freq"],
+                    help="device-resident feature cache (repro.featcache): "
+                         "a static admission policy, or 'dynamic[:seed-"
+                         "admission]' for the on-device CLOCK loop that "
+                         "re-admits at every epoch boundary — hit rates "
+                         "and refill churn print per epoch")
     ap.add_argument("--cache-frac", type=float, default=0.2,
                     help="cache capacity as a fraction of N (with --cache)")
     args = ap.parse_args()
@@ -70,7 +75,8 @@ def main():
           f"epochs={res.epochs_to_converge} "
           f"per_epoch={res.per_epoch_time_s:.2f}s "
           f"total={res.total_time_s:.1f}s"
-          + (f" cache_hit={res.cache_hit_rate:.3f}" if res.cache else ""))
+          + (f" cache_hit={res.cache_hit_rate:.3f} "
+             f"refills={res.cache_refills}" if res.cache else ""))
 
 
 if __name__ == "__main__":

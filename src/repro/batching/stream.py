@@ -21,10 +21,14 @@ Prefetch: while the consumer runs step i, the builder for batch i+1 has
 already been dispatched (jit dispatch is async), overlapping host batch
 assembly + host->device transfer with device compute.
 
-Feature cache: `cache=` attaches a `repro.featcache.CachePlan` (or builds
-one from an admission-policy name against this stream's policy/shape) to
-the stream; consumers route layer-0 feature reads through it
-(`gather_cached`) and measure hit rates.
+Feature cache: `cache=` attaches a `repro.featcache` cache (a static
+`CachePlan`, a dynamic CLOCK `DynamicCacheState`, an admission-policy
+name, or `"dynamic[:admission]"` — normalized by `featcache.as_cache`
+against this stream's policy/shape) to the stream; consumers route
+layer-0 feature reads through it (`gather_cached`) and measure hit
+rates. A dynamic cache is MUTABLE trainer state: `GNNTrainer` re-assigns
+`stream.cache` as the state evolves, so the stream always carries the
+current residency.
 """
 from __future__ import annotations
 
@@ -78,14 +82,16 @@ class BatchStream:
         # the deprecated string knob for the full-neighborhood sampler
         self.sampler = sampling.resolve(
             sampler, mode, lambda: sampling.for_policy(self.policy))
-        # the device feature cache riding with the stream: a
-        # `repro.featcache.CachePlan` (or admission-policy name, built here
-        # against this stream's policy/shape) that consumers gather layer-0
-        # features through — `GNNTrainer` reads it back off the stream
+        # the device feature cache riding with the stream: any
+        # `featcache.as_cache` spec (static plan, dynamic CLOCK state, or
+        # name, built here against this stream's policy/shape) that
+        # consumers gather layer-0 features through — `GNNTrainer` reads
+        # it back off the stream and keeps it current as dynamic
+        # admission evolves the state
         self.cache = None
         if cache is not None:
             from repro import featcache
-            self.cache = featcache.as_plan(
+            self.cache = featcache.as_cache(
                 cache, graph, policy=self.policy, batch_size=batch_size,
                 fanouts=self.fanouts, seed=seed)
         self.prefetch = prefetch

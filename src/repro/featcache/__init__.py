@@ -14,27 +14,39 @@ into a compact `(C, F)` device array with an `int32[N]` position map;
 `repro.kernels.gather_cached` serves every layer-0 feature read through it
 (cache row on hit, global matrix on miss) and counts hits on device, so
 the paper's cache-locality claim becomes a measured per-epoch hit rate
-(`GNNTrainer(cache=...)`) instead of a simulation. The LRU/CLOCK
-simulators for fig9/fig10 live in `featcache.sim` (the old
-`repro.core.cachesim` location is a deprecated shim).
+(`GNNTrainer(cache=...)`) instead of a simulation.
+
+Admission comes in two flavors: STATIC (a frozen `CachePlan`) and DYNAMIC
+(`featcache.dynamic`: `CachePlan.to_dynamic()` / `cache="dynamic"` — a
+trainer-carried CLOCK second-chance state whose reference bits come from
+the extended `gather_cached` counters and whose residency is re-admitted
+at epoch boundaries by `dynamic.refill`, bit-matched to a numpy oracle).
+The LRU/CLOCK simulators for fig9/fig10 live in `featcache.sim` (the old
+`repro.core.cachesim` location is a deprecated shim); simulator and refill
+share ONE tie-breaking rule, `featcache.sim.CLOCK_TIE_BREAK`.
 """
+from repro.featcache.dynamic import DynamicCacheState, as_cache  # noqa: F401
 from repro.featcache.plan import (AdmissionPolicy, CachePlan,   # noqa: F401
                                   CommunityFreqAdmission, DegreeHotAdmission,
                                   PresampledFreqAdmission, as_admission,
                                   as_plan, available_admissions, build_plan,
-                                  cache_stats_np, make_admission,
-                                  register_admission, select_rows)
-from repro.featcache.sim import (clock_miss_rate,               # noqa: F401
+                                  cache_ref_updates_np, cache_stats_np,
+                                  make_admission, register_admission,
+                                  select_rows)
+from repro.featcache.sim import (CLOCK_TIE_BREAK,               # noqa: F401
+                                 clock_miss_rate, clock_replay,
                                  lru_miss_rate, policy_access_stream,
                                  static_miss_rate)
-from repro.kernels.gather_cached.ops import (cache_stats,       # noqa: F401
-                                             gather_cached)
+from repro.kernels.gather_cached.ops import (cache_ref_updates,  # noqa: F401
+                                             cache_stats, gather_cached)
 
 __all__ = [
-    "AdmissionPolicy", "CachePlan", "CommunityFreqAdmission",
-    "DegreeHotAdmission", "PresampledFreqAdmission", "as_admission",
-    "as_plan", "available_admissions", "build_plan", "cache_stats",
-    "cache_stats_np", "clock_miss_rate", "gather_cached", "lru_miss_rate",
+    "AdmissionPolicy", "CachePlan", "CLOCK_TIE_BREAK",
+    "CommunityFreqAdmission", "DegreeHotAdmission", "DynamicCacheState",
+    "PresampledFreqAdmission", "as_admission", "as_cache", "as_plan",
+    "available_admissions", "build_plan", "cache_ref_updates",
+    "cache_ref_updates_np", "cache_stats", "cache_stats_np",
+    "clock_miss_rate", "clock_replay", "gather_cached", "lru_miss_rate",
     "make_admission", "policy_access_stream", "register_admission",
     "select_rows", "static_miss_rate",
 ]

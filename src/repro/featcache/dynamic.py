@@ -1,0 +1,328 @@
+"""On-device CLOCK (second-chance) admission for the feature cache.
+
+PR 4's `CachePlan` froze admission at plan time: a host-side policy picks
+the rows once and the trainer only ever reads them. The paper's
+cache-locality argument (Figs 9-10) is about the *actual* access
+distribution a (policy, sampler) pair produces, which drifts from any
+presample — so this module promotes the simulated CLOCK policy
+(`featcache.sim.clock_miss_rate`) into trainer-carried mutable state: the
+cache observes its own hits and misses on device and re-admits at epoch
+boundaries.
+
+State machine of one cache slot across an epoch:
+
+      resident row hit                       epoch-boundary refill
+    ┌──────────────────┐                  ┌────────────────────────────┐
+    │ reference bit←1  │   hand passes:   │ bit clear & colder than a  │
+    │ slot_freq += 1   │   bit 1 → 0,     │ candidate → EVICT; row is  │
+    └──────────────────┘   slot survives  │ swapped, bit starts CLEAR  │
+      miss on node u       (2nd chance)   └────────────────────────────┘
+    ┌──────────────────┐
+    │ freq[u] += 1     │  → u becomes an admission candidate
+    └──────────────────┘
+
+Per TRAIN batch (inside the jitted step, no host sync): `ref_updates`
+turns the extended `gather_cached` counters
+(`kernels.gather_cached.ops.cache_ref_updates`) into new reference bits,
+per-slot hit counts, and the per-node candidate-frequency accumulator;
+the trainer reassembles the state host-side (`with_refs`) so the
+unchanged `(C, F)` cache array is never copied. Evaluation reads through
+the cache but never feeds the counters — only the training distribution
+drives admission.
+
+At each epoch boundary (outside all differentiated code — refills are
+VJP-invisible by construction) `refill` runs a FREQUENCY-GATED CLOCK
+pass: candidates are the missed, non-resident nodes sorted by miss
+frequency (desc, node id asc — `plan.select_rows`'s rule); for each, the
+hand walks the ring clearing the reference bit of every slot it passes
+and skipping slots that were referenced (the second chance) OR whose
+occupant's epoch access count is at least the candidate's (the gate —
+comparing a resident row's hits to a missed row's misses compares the
+same thing: how often the epoch touched the row). The candidate claims
+the first clear, strictly-colder slot; if a full scan (2C steps — one
+rotation to strip bits, one to probe every slot clean) finds none, every
+slot is at least as hot as this hottest remaining candidate, so the pass
+ends exactly (colder candidates cannot do better). Cache rows are
+exact copies of global feature rows, so a hit is bit-identical to the
+uncached read and the trainer's loss trajectory is unchanged by where the
+rows live. Tie-breaking is `featcache.sim.CLOCK_TIE_BREAK` — ONE rule
+shared with the simulator.
+
+`refill` is a jitted device path; `refill_np` is the pure-numpy oracle it
+must match slot-for-slot (including the final hand position and the
+reference bits a failed pass leaves cleared) — pinned by
+tests/test_featcache_dynamic.py in Pallas interpret mode in CI.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.featcache.plan import (CachePlan, as_plan, build_plan,
+                                  cache_ref_updates_np)
+from repro.kernels.gather_cached.ops import cache_ref_updates
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["cache", "pos", "slot_ids", "refbit", "slot_freq", "freq",
+                 "hand"],
+    meta_fields=["capacity", "policy"])
+@dataclass
+class DynamicCacheState:
+    """Trainer-carried CLOCK cache state (a pytree; rides through jit and
+    into checkpoints for bit-exact resume).
+
+    cache:     (C, F) float32 — exact copies of the resident feature rows.
+    pos:       (N,) int32 — cache slot of node i, or -1 (not resident).
+    slot_ids:  (C,) int32 — node id resident in each slot (-1 = empty).
+    refbit:    (C,) int32 0/1 — CLOCK reference bits; set by hits, cleared
+               only by the hand (they persist across epochs).
+    slot_freq: (C,) int32 — per-slot hit counts THIS epoch (refill gate).
+    freq:      (N,) int32 — per-node miss counts THIS epoch (candidates).
+    hand:      () int32 — the clock hand.
+    capacity / policy: static metadata (jit-hashable); `policy` names the
+               admission that seeded the initial residency."""
+    cache: jnp.ndarray
+    pos: jnp.ndarray
+    slot_ids: jnp.ndarray
+    refbit: jnp.ndarray
+    slot_freq: jnp.ndarray
+    freq: jnp.ndarray
+    hand: jnp.ndarray
+    capacity: int
+    policy: str
+
+    def cached_ids(self) -> np.ndarray:
+        """(<=C,) resident node ids in cache-row order (skips empty slots)."""
+        ids = np.asarray(self.slot_ids)
+        return ids[ids >= 0]
+
+    def describe(self) -> str:
+        return f"clock[{self.policy}]@C={self.capacity}"
+
+
+def from_plan(plan: CachePlan) -> DynamicCacheState:
+    """Seed the CLOCK state from a static plan: same residency, all
+    reference bits clear, hand at slot 0, zeroed accumulators."""
+    pos = np.asarray(plan.pos)
+    C = int(plan.capacity)
+    slot_ids = np.full(C, -1, np.int32)
+    ids = np.where(pos >= 0)[0]
+    slot_ids[pos[ids]] = ids
+    return DynamicCacheState(
+        cache=plan.cache,
+        pos=plan.pos,
+        slot_ids=jnp.asarray(slot_ids),
+        refbit=jnp.zeros((C,), jnp.int32),
+        slot_freq=jnp.zeros((C,), jnp.int32),
+        freq=jnp.zeros((pos.shape[0],), jnp.int32),
+        hand=jnp.zeros((), jnp.int32),
+        capacity=C,
+        policy=plan.policy,
+    )
+
+
+def as_cache(obj, graph, **kw):
+    """Normalize ANY cache spec the trainer/stream accept: None passes
+    through; `CachePlan` / `DynamicCacheState` instances pass through;
+    an admission name builds a static plan; `"dynamic"` (or
+    `"dynamic:<admission>"`, default admission `presampled_freq`) builds
+    that static plan and promotes it to a CLOCK state."""
+    if obj is None or isinstance(obj, (CachePlan, DynamicCacheState)):
+        return obj
+    if isinstance(obj, str) and (obj == "dynamic"
+                                 or obj.startswith("dynamic:")):
+        adm = obj.split(":", 1)[1] if ":" in obj else "presampled_freq"
+        return from_plan(build_plan(graph, adm, **kw))
+    return as_plan(obj, graph, **kw)
+
+
+# ---------------------------------------------------------------------------
+# per-batch reference-bit / frequency accumulation (inside jitted steps)
+# ---------------------------------------------------------------------------
+def ref_updates(state: DynamicCacheState, ids) -> Tuple:
+    """Device path, called INSIDE the trainer's jitted step: fold one
+    batch of reads into `(refbit, slot_freq, freq)`. Returns only the
+    three updated arrays (not a new state) so the step's outputs never
+    include — and jit never copies — the unchanged (C, F) cache array;
+    `with_refs` reassembles host-side. Mirror: `ref_updates_np`."""
+    slot_hits, node_miss = cache_ref_updates(state.pos, ids, state.capacity)
+    return (jnp.maximum(state.refbit, (slot_hits > 0).astype(jnp.int32)),
+            state.slot_freq + slot_hits,
+            state.freq + node_miss)
+
+
+def with_refs(state: DynamicCacheState, refs) -> DynamicCacheState:
+    """Host-side reassembly of `ref_updates` output into a new state."""
+    refbit, slot_freq, freq = refs
+    return replace(state, refbit=refbit, slot_freq=slot_freq, freq=freq)
+
+
+def ref_updates_np(state: Dict[str, np.ndarray], ids) -> Dict[str, np.ndarray]:
+    """Numpy mirror of `ref_updates` over a `state_to_np` dict."""
+    slot_hits, node_miss = cache_ref_updates_np(
+        state["pos"], ids, len(state["slot_ids"]))
+    out = dict(state)
+    out["refbit"] = np.maximum(state["refbit"],
+                               (slot_hits > 0).astype(np.int32))
+    out["slot_freq"] = state["slot_freq"] + slot_hits
+    out["freq"] = state["freq"] + node_miss
+    return out
+
+
+# ---------------------------------------------------------------------------
+# epoch-boundary CLOCK eviction/refill
+# ---------------------------------------------------------------------------
+@jax.jit
+def _refill_jit(state: DynamicCacheState, feats):
+    C = state.capacity
+    N = state.pos.shape[0]
+    # candidates: missed NON-resident nodes, hottest first, ties -> lower
+    # node id (the same lexsort rule as plan.select_rows)
+    cand_freq = jnp.where(state.pos < 0, state.freq, 0).astype(jnp.int32)
+    order = jnp.lexsort((jnp.arange(N), -cand_freq))
+    cand_ids = order[:C].astype(jnp.int32)
+    cand_fs = cand_freq[cand_ids]
+
+    def step(carry, cand):
+        cache, pos, slot_ids, refbit, slot_freq, hand, done, admitted = carry
+        cid, f = cand
+        active = jnp.logical_and(jnp.logical_not(done), f > 0)
+
+        # frequency-gated second-chance walk: pass (and clear the bit of)
+        # every slot that was referenced OR is at least as hot as the
+        # candidate; stop at the first clear, strictly-colder slot. 2C
+        # steps scan every slot clean — reaching it means no victim exists
+        # for this (or, sorted desc, any later) candidate.
+        def wcond(c):
+            rb, h, s = c
+            return jnp.logical_and(
+                s < 2 * C,
+                jnp.logical_or(rb[h] > 0, slot_freq[h] >= f))
+
+        def wbody(c):
+            rb, h, s = c
+            return rb.at[h].set(0), (h + 1) % C, s + 1
+
+        refbit, hand, steps = jax.lax.cond(
+            active, lambda c: jax.lax.while_loop(wcond, wbody, c),
+            lambda c: c, (refbit, hand, jnp.int32(0)))
+        v = hand
+        # equal frequency -> incumbent stays (see CLOCK_TIE_BREAK rule 5)
+        admit = jnp.logical_and(active, steps < 2 * C)
+        done = jnp.logical_or(done, jnp.logical_and(active,
+                                                    jnp.logical_not(admit)))
+        old = slot_ids[v]
+        pos = pos.at[jnp.where(jnp.logical_and(admit, old >= 0),
+                               old, N)].set(-1, mode="drop")
+        pos = pos.at[jnp.where(admit, cid, N)].set(v, mode="drop")
+        drop_v = jnp.where(admit, v, C)
+        slot_ids = slot_ids.at[drop_v].set(cid, mode="drop")
+        slot_freq = slot_freq.at[drop_v].set(f, mode="drop")
+        refbit = refbit.at[drop_v].set(0, mode="drop")  # insert CLEAR
+        cache = cache.at[drop_v].set(feats[cid].astype(cache.dtype),
+                                     mode="drop")
+        hand = jnp.where(admit, (v + 1) % C, hand)
+        return (cache, pos, slot_ids, refbit, slot_freq, hand, done,
+                admitted + admit.astype(jnp.int32)), None
+
+    init = (state.cache, state.pos, state.slot_ids, state.refbit,
+            state.slot_freq, state.hand.astype(jnp.int32),
+            jnp.asarray(False), jnp.int32(0))
+    (cache, pos, slot_ids, refbit, slot_freq, hand, _, admitted), _ = \
+        jax.lax.scan(step, init, (cand_ids, cand_fs))
+    new_state = replace(
+        state, cache=cache, pos=pos, slot_ids=slot_ids, refbit=refbit,
+        slot_freq=jnp.zeros_like(slot_freq),   # next epoch's counters
+        freq=jnp.zeros_like(state.freq),
+        hand=hand)
+    return new_state, admitted
+
+
+def refill(state: DynamicCacheState,
+           feats) -> Tuple[DynamicCacheState, jnp.ndarray]:
+    """Epoch-boundary frequency-gated CLOCK eviction/refill (jitted
+    device path).
+
+    Swaps cold slots for hot missed rows: candidates in (miss-frequency
+    desc, node id asc) order each claim the first hand-walked slot that
+    is clear AND strictly colder; a victimless full scan ends the pass
+    (exact, not heuristic — see module docstring). Rows are copied
+    from `feats` — the SAME (N, F) matrix the uncached path reads — so
+    residency changes never perturb the loss. Epoch accumulators
+    (`slot_freq`, `freq`) reset; reference bits persist (only the hand
+    clears them). Returns `(new_state, admitted)` where `admitted` is the
+    refill churn (an int32 scalar on device).
+
+    Must be called OUTSIDE differentiated code (the trainer refills
+    between batches at epoch boundaries). Oracle: `refill_np`."""
+    return _refill_jit(state, feats)
+
+
+def refill_np(state: Dict[str, np.ndarray],
+              feats: np.ndarray) -> Tuple[Dict[str, np.ndarray], int]:
+    """Pure-numpy CLOCK refill — THE oracle `refill` must match
+    slot-for-slot: residency, cache rows, reference bits (including the
+    ones a failed pass leaves cleared), accumulator resets, and the final
+    hand position. Operates on a `state_to_np` dict; returns
+    `(new_state_dict, admitted)`."""
+    cache = state["cache"].copy()
+    pos = state["pos"].copy()
+    slot_ids = state["slot_ids"].copy()
+    refbit = state["refbit"].copy()
+    slot_freq = state["slot_freq"].copy()
+    freq = state["freq"]
+    hand = int(state["hand"])
+    C = len(slot_ids)
+    cand_freq = np.where(pos < 0, freq, 0)
+    order = np.lexsort((np.arange(len(freq)), -cand_freq))[:C]
+    admitted = 0
+    feats = np.asarray(feats)
+    for cand in order:
+        f = int(cand_freq[cand])
+        if f <= 0:
+            break                       # sorted desc: no candidates left
+        steps = 0                       # frequency-gated second-chance walk
+        while steps < 2 * C and (refbit[hand] > 0
+                                 or int(slot_freq[hand]) >= f):
+            refbit[hand] = 0
+            hand = (hand + 1) % C
+            steps += 1
+        if steps >= 2 * C:
+            break                       # every slot at least as hot: every
+            # later (colder) candidate fails too
+        v = hand
+        old = int(slot_ids[v])
+        if old >= 0:
+            pos[old] = -1
+        slot_ids[v] = cand
+        pos[cand] = v
+        cache[v] = feats[cand].astype(cache.dtype)
+        slot_freq[v] = f
+        refbit[v] = 0                   # insert CLEAR
+        hand = (v + 1) % C
+        admitted += 1
+    out = dict(state)
+    out.update(cache=cache, pos=pos, slot_ids=slot_ids, refbit=refbit,
+               slot_freq=np.zeros_like(slot_freq),
+               freq=np.zeros_like(freq),
+               hand=np.asarray(hand, np.int32))
+    return out, admitted
+
+
+def state_to_np(state: DynamicCacheState) -> Dict[str, np.ndarray]:
+    """Materialize the device state as a dict of numpy arrays (the mirror
+    functions' representation; also handy for test equality checks)."""
+    return {"cache": np.asarray(state.cache),
+            "pos": np.asarray(state.pos),
+            "slot_ids": np.asarray(state.slot_ids),
+            "refbit": np.asarray(state.refbit),
+            "slot_freq": np.asarray(state.slot_freq),
+            "freq": np.asarray(state.freq),
+            "hand": np.asarray(state.hand)}

@@ -185,6 +185,13 @@ class CachePlan:
         ids = np.where(pos >= 0)[0]
         return ids[np.argsort(pos[ids])]
 
+    def to_dynamic(self):
+        """Promote this static plan to CLOCK admission state
+        (`repro.featcache.dynamic.DynamicCacheState`): same residency,
+        clear reference bits, zeroed accumulators, hand at slot 0."""
+        from repro.featcache.dynamic import from_plan
+        return from_plan(self)
+
     def describe(self) -> str:
         return f"{self.policy}@C={self.capacity}"
 
@@ -245,3 +252,23 @@ def cache_stats_np(pos: np.ndarray, ids: np.ndarray,
     valid = (ids >= 0) & (ids < num_nodes)
     hit = valid & (np.asarray(pos)[np.clip(ids, 0, num_nodes - 1)] >= 0)
     return int(hit.sum()), int((valid & ~hit).sum())
+
+
+def cache_ref_updates_np(pos: np.ndarray, ids: np.ndarray,
+                         capacity: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Numpy mirror of the extended device counters
+    `repro.kernels.gather_cached.ops.cache_ref_updates`: per-slot hit
+    counts `(C,)` and per-node miss counts `(N,)` over the VALID entries
+    of `ids` (same validity rule as `cache_stats_np`)."""
+    pos = np.asarray(pos)
+    ids = np.asarray(ids)
+    num_nodes = len(pos)
+    valid = (ids >= 0) & (ids < num_nodes)
+    gid = np.clip(ids, 0, num_nodes - 1)
+    sel = pos[gid]
+    hit = valid & (sel >= 0)
+    slot_hits = np.zeros(capacity, np.int32)
+    np.add.at(slot_hits, sel[hit], 1)
+    node_miss = np.zeros(num_nodes, np.int32)
+    np.add.at(node_miss, gid[valid & ~hit], 1)
+    return slot_hits, node_miss

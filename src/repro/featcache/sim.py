@@ -146,12 +146,35 @@ def _lru_miss_rate_ref(batches: Iterable[np.ndarray],
 # ---------------------------------------------------------------------------
 # CLOCK: second-chance approximation of LRU
 # ---------------------------------------------------------------------------
-def clock_miss_rate(batches: Iterable[np.ndarray], capacity: int) -> float:
+CLOCK_TIE_BREAK = """THE CLOCK tie-breaking rule, shared verbatim by the
+simulator (`clock_replay` / `clock_miss_rate`) and the on-device epoch
+refill (`repro.featcache.dynamic.refill`) so the simulated and measured
+caches are the same policy:
+
+  1. victim among equal-priority slots (reference bit CLEAR — at the
+     refill, clear AND strictly colder than the candidate): the FIRST
+     such slot at or after the hand in cyclic slot order — the hand walk
+     clears the bit of every slot it passes and stops at the first
+     eligible one; the hand then advances one past the victim.
+  2. empty slots fill in ascending slot order before any eviction.
+  3. inserted rows start with the reference bit CLEAR; only reuse sets it.
+  4. equal-priority CANDIDATES are considered in arrival order: stream
+     order in the simulator; ascending node id at the refill (candidates
+     there are sorted by miss frequency desc, node id asc — the same
+     lexsort rule `plan.select_rows` uses).
+  5. candidate vs incumbent at EQUAL frequency (refill only): the
+     incumbent stays — admission requires strictly greater frequency."""
+
+
+def clock_replay(batches: Iterable[np.ndarray], capacity: int):
     """CLOCK (second-chance) replacement: one reference bit per slot, a
     rotating hand that clears bits until it finds a victim. The cheap
-    hardware-style stand-in for LRU — fig9 reports both so the follow-on
-    (an on-device CLOCK admission loop) has a simulated target. Inserted
-    ids start with the reference bit CLEAR; only reuse sets it."""
+    hardware-style stand-in for LRU, and the simulated target of the
+    on-device admission loop (`repro.featcache.dynamic`). Tie-breaking
+    follows `CLOCK_TIE_BREAK` exactly.
+
+    Returns `(miss_rate, slot_id (C,), refbit (C,), hand, filled)` — the
+    final cache state is exposed so tests can pin the tie rule."""
     capacity = int(capacity)
     slot_of = {}                                  # id -> slot
     slot_id = np.full(capacity, -1, np.int64)
@@ -170,10 +193,10 @@ def clock_miss_rate(batches: Iterable[np.ndarray], capacity: int) -> float:
                 hits += 1
                 continue
             if filled < capacity:
-                s = filled
+                s = filled                        # rule 2: fill in order
                 filled += 1
             else:
-                while refbit[hand]:
+                while refbit[hand]:               # rule 1: second chance
                     refbit[hand] = False
                     hand = (hand + 1) % capacity
                 s = hand
@@ -181,8 +204,16 @@ def clock_miss_rate(batches: Iterable[np.ndarray], capacity: int) -> float:
                 hand = (hand + 1) % capacity
             slot_id[s] = u
             slot_of[u] = s
-            refbit[s] = False
-    return 1.0 - hits / max(total, 1)
+            refbit[s] = False                     # rule 3: insert CLEAR
+    return 1.0 - hits / max(total, 1), slot_id, refbit, hand, filled
+
+
+def clock_miss_rate(batches: Iterable[np.ndarray], capacity: int) -> float:
+    """Miss rate of `clock_replay`. NOTE: CLOCK is NOT a stack algorithm —
+    unlike LRU it is neither pointwise dominated by LRU nor monotone in
+    capacity (Belady-style anomalies exist; tests pin a counterexample).
+    It tracks LRU from above on average, which is what fig9/fig10 report."""
+    return clock_replay(batches, capacity)[0]
 
 
 # ---------------------------------------------------------------------------

@@ -56,6 +56,27 @@ def cache_stats(pos, ids, num_nodes: int):
     return hits, jnp.sum(valid, dtype=jnp.int32) - hits
 
 
+def cache_ref_updates(pos, ids, capacity: int):
+    """Per-SLOT hit counts and per-NODE miss counts for one batch of reads
+    — the extended device counters behind the dynamic CLOCK admission loop
+    (`repro.featcache.dynamic`).
+
+    Returns `(slot_hits (C,) int32, node_miss (N,) int32)` over the VALID
+    entries of `ids` (same validity rule as `cache_stats`; their sums equal
+    its scalar hits/misses). `slot_hits > 0` is the per-slot reference bit;
+    `node_miss` feeds the candidate-frequency accumulator the epoch refill
+    admits from. Mirror: `repro.featcache.plan.cache_ref_updates_np`."""
+    num_nodes = pos.shape[0]
+    ids = ids.astype(jnp.int32)
+    gid, sel, hit = _hit_mask(pos, ids, num_nodes)
+    valid = (ids >= 0) & (ids < num_nodes)
+    slot_hits = jnp.zeros((capacity,), jnp.int32).at[
+        jnp.where(hit, sel, capacity)].add(1, mode="drop")
+    node_miss = jnp.zeros((num_nodes,), jnp.int32).at[
+        jnp.where(valid & ~hit, gid, num_nodes)].add(1, mode="drop")
+    return slot_hits, node_miss
+
+
 def _fwd_pallas(cache, feats, pos, ids, interpret):
     N = feats.shape[0]
     gid, sel, hit = _hit_mask(pos, ids, N)

@@ -160,14 +160,16 @@ def apply_gnn(cfg: GNNConfig, params: Params, batch: MiniBatch, x,
     (cap_L, in_dim) copy is ever made, so per-batch feature HBM reads equal
     the Fig-6 working-set bytes.
 
-    cache: an optional `repro.featcache.CachePlan` (requires
-    feats_global=True). Layer-0 feature reads then route through the
-    two-level `gather_cached` kernel: the (cap_L, in_dim) input level is
-    assembled once per batch, each row served from the device-resident
-    cache on hit and from the global matrix on miss. Cache rows are exact
-    copies, so outputs are bit-identical to the uncached path; the
-    trainer measures the hit rates separately (`cache_stats` on the same
-    position map). The gather backend follows `cfg.agg_impl`.
+    cache: an optional `repro.featcache.CachePlan` or dynamic CLOCK
+    `DynamicCacheState` — anything with `.cache` (C, F) rows and `.pos`
+    (N,) map (requires feats_global=True). Layer-0 feature reads then
+    route through the two-level `gather_cached` kernel: the
+    (cap_L, in_dim) input level is assembled once per batch, each row
+    served from the device-resident cache on hit and from the global
+    matrix on miss. Cache rows are exact copies, so outputs are
+    bit-identical to the uncached path regardless of residency; the
+    trainer measures hit rates (and feeds dynamic admission) separately
+    on the same position map. The gather backend follows `cfg.agg_impl`.
     """
     impl = resolve_agg_impl(cfg.agg_impl)
     L = len(batch.blocks)

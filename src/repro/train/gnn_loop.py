@@ -12,12 +12,22 @@ pos) as the stream, and `fit()`'s scheduler state (lr, plateau/early-stop
 counters, best-so-far weights) is checkpointed alongside the cursor, so a
 resumed run replays the same training trajectory.
 
-Feature cache: `cache=` (a `repro.featcache.CachePlan` or admission-policy
-name) routes every layer-0 feature read through the device-resident cache
-(`gather_cached`) — a pure read-path optimization (loss trajectory is
-bit-identical) whose measured hit rate lands in each `EpochMetrics` via a
-`HitRateMeter`, turning the paper's §6.5 cache-locality claim into a
-number this trainer reports.
+Feature cache: `cache=` (a `repro.featcache.CachePlan`, admission-policy
+name, `DynamicCacheState`, or `"dynamic[:admission]"`) routes every
+layer-0 feature read through the device-resident cache (`gather_cached`)
+— a pure read-path optimization (loss trajectory is bit-identical) whose
+measured hit rate lands in each `EpochMetrics` via a `HitRateMeter`,
+turning the paper's §6.5 cache-locality claim into a number this trainer
+reports. With DYNAMIC admission the cache is trainer-carried mutable
+state: every TRAIN step folds the extended device counters into the CLOCK
+reference bits / candidate frequencies (`dynamic.ref_updates`, inside the
+jitted step, reassembled host-side so the (C, F) rows are never copied),
+and at every epoch boundary — in `run_epoch` AND when `train_steps`
+crosses epochs — `dynamic.refill` swaps cold slots for hot missed rows.
+The evolving state is checkpointed alongside the weights (plus the
+boundary bookkeeping in `extra`), so interrupted dynamic-cache runs
+resume with a bit-identical loss trajectory AND cache state. Evaluation
+reads through the cache but never feeds the counters.
 """
 from __future__ import annotations
 
@@ -31,6 +41,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import featcache, sampling
+from repro.featcache import dynamic as featcache_dynamic
+from repro.featcache.dynamic import DynamicCacheState
 from repro.batching import (BatchStream, CapsCalibrator, Cursor, as_policy,
                             eval_batches, make_policy)
 from repro.configs.base import GNNConfig, TrainConfig
@@ -54,6 +66,7 @@ class EpochMetrics:
     epoch_time_s: float
     mean_unique_nodes: float
     cache_hit_rate: float = 0.0     # measured (repro.featcache); 0 = no cache
+    cache_refills: int = 0          # dynamic-CLOCK rows admitted (churn)
 
 
 @dataclass
@@ -68,8 +81,9 @@ class TrainResult:
     feature_bytes_per_batch: float
     caps: tuple
     history: List[EpochMetrics] = field(default_factory=list)
-    cache: str = ""                 # CachePlan.describe(), "" = uncached
+    cache: str = ""                 # cache describe(), "" = uncached
     cache_hit_rate: float = 0.0     # measured over the whole run
+    cache_refills: int = 0          # total dynamic-CLOCK churn of the run
 
 
 def _batch_cache_stats(cache, batch: mb.MiniBatch):
@@ -99,7 +113,12 @@ def _make_steps(cfg: GNNConfig, tcfg: TrainConfig):
             grads, opt_state, params, lr=lr,
             weight_decay=tcfg.weight_decay)
         hits, misses = _batch_cache_stats(cache, batch)
-        return new_params, new_opt, loss, hits, misses
+        # dynamic CLOCK admission: fold this batch's reads into the
+        # reference bits / candidate frequencies ON DEVICE; only the three
+        # accumulator arrays come back (the (C, F) rows are never copied)
+        refs = (featcache_dynamic.ref_updates(cache, batch.node_ids)
+                if isinstance(cache, DynamicCacheState) else None)
+        return new_params, new_opt, loss, hits, misses, refs
 
     @jax.jit
     def eval_step(params, batch: mb.MiniBatch, feats, degrees, cache):
@@ -149,10 +168,11 @@ class GNNTrainer:
         self.train_step, self.eval_step = _make_steps(cfg, tcfg)
         self.params = init_gnn(cfg, jax.random.key(seed))
         self.opt_state = adamw.init(self.params)
-        # `cache` is a CachePlan or an admission-policy name (built here
-        # against THIS policy's access distribution); it rides on the
-        # stream and every step gathers layer-0 features through it
-        self.cache = featcache.as_plan(
+        # `cache` is a CachePlan / DynamicCacheState / admission name /
+        # "dynamic[:admission]" (built here against THIS policy's access
+        # distribution); it rides on the stream and every step gathers
+        # layer-0 features through it
+        self.cache = featcache.as_cache(
             cache, graph, capacity=cache_capacity, frac=cache_frac,
             policy=self.policy, batch_size=tcfg.batch_size,
             fanouts=self.fanouts, seed=seed)
@@ -162,6 +182,9 @@ class GNNTrainer:
             graph, self.policy, tcfg.batch_size, self.fanouts, self.caps,
             seed=seed, device_graph=self.g, labels=self.labels,
             cache=self.cache)
+        # epoch whose boundary refill is still pending (dynamic cache);
+        # travels in checkpoint `extra` so resume never double-refills
+        self._cache_epoch = self.stream.cursor.epoch
         self.global_step = 0
         self._best_params = None      # best-val weights seen by fit()
         self._fit_state = None        # lr / plateau / early-stop counters
@@ -172,14 +195,20 @@ class GNNTrainer:
     def _state(self):
         best = self._best_params if self._best_params is not None \
             else self.params
-        return {"params": self.params, "opt": self.opt_state, "best": best}
+        state = {"params": self.params, "opt": self.opt_state, "best": best}
+        if isinstance(self.cache, DynamicCacheState):
+            # the evolving CLOCK state is training state: rows, residency,
+            # reference bits, accumulators and hand all resume bit-exactly
+            state["cache"] = self.cache
+        return state
 
     def save(self) -> None:
         if not self.ckpt_dir:
             return
         ckpt.save(self.ckpt_dir, self.global_step, self._state(),
                   extra={"cursor": self.stream.cursor.state(),
-                         "fit": self._fit_state})
+                         "fit": self._fit_state,
+                         "cache_epoch": self._cache_epoch})
 
     def _try_resume(self) -> None:
         step, tree, extra = ckpt.restore_latest(self.ckpt_dir, self._state())
@@ -190,6 +219,10 @@ class GNNTrainer:
         self.global_step = step
         self.stream.cursor = Cursor.from_state(extra["cursor"])
         self._fit_state = extra.get("fit")
+        if "cache" in tree:
+            self._set_cache(tree["cache"])
+        self._cache_epoch = int(extra.get("cache_epoch",
+                                          self.stream.cursor.epoch))
 
     # -- batch building -----------------------------------------------------
     def _dropout_key(self):
@@ -210,7 +243,7 @@ class GNNTrainer:
         b = mb.build_batch(jax.random.key(0), self.g,
                            jnp.asarray(roots, jnp.int32), self.labels,
                            self.fanouts, self.caps, self.sampler)
-        self.params, self.opt_state, _, _, _ = self.train_step(
+        self.params, self.opt_state, *_ = self.train_step(
             self.params, self.opt_state, b, self.feats, self.degrees,
             0.0, jax.random.key(0), self.cache)
         be = mb.build_batch(jax.random.key(0), self.g,
@@ -222,19 +255,52 @@ class GNNTrainer:
         self.params, self.opt_state = saved
         return self
 
+    def _set_cache(self, cache) -> None:
+        """Replace the carried cache state (and keep the stream's view —
+        the plumbing consumers read it back from — in sync)."""
+        self.cache = cache
+        self.stream.cache = cache
+
     def _train_one(self, batch: mb.MiniBatch, lr: float):
-        self.params, self.opt_state, loss, hits, misses = self.train_step(
-            self.params, self.opt_state, batch, self.feats, self.degrees,
-            lr, self._dropout_key(), self.cache)
+        self.params, self.opt_state, loss, hits, misses, refs = \
+            self.train_step(
+                self.params, self.opt_state, batch, self.feats,
+                self.degrees, lr, self._dropout_key(), self.cache)
         if self.cache is not None:
             # keep the device counters un-synced: a float()/int() here
             # would serialize away the stream's prefetch overlap
             self._pending_stats.append((hits, misses))
+        if refs is not None:
+            self._set_cache(featcache_dynamic.with_refs(self.cache, refs))
         self.global_step += 1
+        # refill BEFORE any checkpoint at this step: a boundary checkpoint
+        # then carries the post-refill state + advanced _cache_epoch, so a
+        # resumed run neither skips nor repeats the refill
+        self._maybe_refill()
         if self.ckpt_dir and self.ckpt_every and \
                 self.global_step % self.ckpt_every == 0:
             self.save()
         return loss
+
+    def _maybe_refill(self) -> None:
+        """Epoch-boundary CLOCK eviction/refill (dynamic cache only).
+
+        Called after every consumed batch, in `run_epoch` AND
+        `train_steps`: the cursor reaching the end of epoch
+        `_cache_epoch` triggers exactly one refill per boundary — the one
+        point where residency may change, outside all differentiated
+        code. Syncs one int (the churn) per epoch."""
+        if not isinstance(self.cache, DynamicCacheState):
+            return
+        c = self.stream.cursor
+        at_end = c.pos >= self.stream.num_batches(c.epoch)
+        if not (c.epoch > self._cache_epoch or
+                (c.epoch == self._cache_epoch and at_end)):
+            return
+        state, admitted = featcache_dynamic.refill(self.cache, self.feats)
+        self._set_cache(state)
+        self.cache_meter.observe_refill(admitted)
+        self._cache_epoch = c.epoch + 1 if at_end else c.epoch
 
     def _flush_cache_stats(self) -> None:
         """Sync pending per-batch counters into the hit-rate meter."""
@@ -243,7 +309,9 @@ class GNNTrainer:
         self._pending_stats = []
 
     def run_epoch(self, lr: float) -> Dict:
-        """Consume the remainder of the stream's current epoch."""
+        """Consume the remainder of the stream's current epoch (the
+        epoch-boundary refill fires inside `_train_one` at the last
+        batch, so the dynamic cache is already post-refill on return)."""
         t0 = time.perf_counter()
         mark = self.cache_meter.mark()
         losses, uniq = [], []
@@ -255,11 +323,15 @@ class GNNTrainer:
         dt = time.perf_counter() - t0
         self._flush_cache_stats()
         if not losses:          # resumed exactly on an epoch boundary
-            return {"loss": 0.0, "time": dt, "uniq": 0.0, "cache_hit": 0.0}
+            return {"loss": 0.0, "time": dt, "uniq": 0.0,
+                    "cache_hit": 0.0, "cache_refill": 0}
+        ep = self.cache_meter.note_epoch(mark) if self.cache is not None \
+            else {"hit_rate": 0.0, "refills": 0}
         return {"loss": float(np.mean([float(l) for l in losses])),
                 "time": dt,
                 "uniq": float(np.mean([float(u) for u in uniq])),
-                "cache_hit": self.cache_meter.rate_since(mark)}
+                "cache_hit": ep["hit_rate"],
+                "cache_refill": ep["refills"]}
 
     def train_steps(self, n: int, lr: Optional[float] = None) -> List[float]:
         """Consume exactly `n` batches (crossing epoch boundaries)."""
@@ -313,12 +385,14 @@ class GNNTrainer:
             ev = self.evaluate(self.graph.val_ids)
             history.append(EpochMetrics(epoch, em["loss"], ev["loss"],
                                         ev["acc"], em["time"], em["uniq"],
-                                        em["cache_hit"]))
+                                        em["cache_hit"],
+                                        em["cache_refill"]))
             if verbose:
                 print(f"  epoch {epoch:3d} loss={em['loss']:.4f} "
                       f"val={ev['acc']:.4f} t={em['time']:.2f}s "
                       f"uniq={em['uniq']:.0f} "
-                      f"cache_hit={em['cache_hit']:.3f}")
+                      f"cache_hit={em['cache_hit']:.3f} "
+                      f"refill={em['cache_refill']}")
             if ev["acc"] > best_val_acc:
                 best_val_acc = ev["acc"]
                 best_params = jax.tree.map(lambda x: x, self.params)
@@ -358,6 +432,7 @@ class GNNTrainer:
             history=history,
             cache=self.cache.describe() if self.cache is not None else "",
             cache_hit_rate=self.cache_meter.hit_rate,
+            cache_refills=self.cache_meter.refills,
         )
 
 

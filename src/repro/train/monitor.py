@@ -6,7 +6,9 @@ EMA of step time and flags outliers; `resilient_step` retries a step
 function and escalates to a checkpoint-restore callback after repeated
 failures (tested by fault injection in tests/test_fault_tolerance.py).
 `HitRateMeter` accumulates the feature-cache hit/miss counters the GNN
-trainer measures per batch (`repro.featcache`) into per-epoch hit rates.
+trainer measures per batch (`repro.featcache`) into per-epoch hit rates,
+plus — for dynamic CLOCK admission — the per-epoch refill churn and the
+hit-rate trajectory across epochs.
 """
 from __future__ import annotations
 
@@ -50,13 +52,24 @@ class HitRateMeter:
     The trainer feeds it the device counters `gather_cached` mirrors
     (one observe per batch, after the end-of-epoch sync so metrics never
     force an extra host round-trip); `mark()`/`rate_since` carve the
-    running totals into per-epoch windows."""
+    running totals into per-epoch windows. With DYNAMIC admission
+    (`featcache.dynamic`) it also counts refill churn (`observe_refill`,
+    once per epoch boundary) and `note_epoch` records the per-epoch
+    (hit rate, admitted rows) trajectory — the number the paper's
+    cache-locality figures are really about: does the cache track the
+    access distribution over time."""
     hits: int = 0
     misses: int = 0
+    refills: int = 0                  # admitted rows, all epochs (churn)
+    trajectory: List[dict] = field(default_factory=list)
 
     def observe(self, hits, misses) -> None:
         self.hits += int(hits)
         self.misses += int(misses)
+
+    def observe_refill(self, admitted) -> None:
+        """Count one epoch boundary's refill churn (admitted rows)."""
+        self.refills += int(admitted)
 
     @property
     def total(self) -> int:
@@ -67,12 +80,21 @@ class HitRateMeter:
         return self.hits / max(self.total, 1)
 
     def mark(self):
-        """Window marker: pass the result to `rate_since` later."""
-        return (self.hits, self.misses)
+        """Window marker: pass the result to `rate_since`/`note_epoch`."""
+        return (self.hits, self.misses, self.refills)
 
     def rate_since(self, mark) -> float:
-        h0, m0 = mark
+        h0, m0 = mark[0], mark[1]
         return (self.hits - h0) / max(self.total - h0 - m0, 1)
+
+    def note_epoch(self, mark) -> dict:
+        """Close the epoch window opened at `mark`: append (and return)
+        `{"hit_rate", "refills"}` on the trajectory."""
+        entry = {"hit_rate": self.rate_since(mark),
+                 "refills": self.refills - (mark[2] if len(mark) > 2
+                                            else 0)}
+        self.trajectory.append(entry)
+        return entry
 
 
 class StepFailure(RuntimeError):

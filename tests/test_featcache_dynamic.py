@@ -1,0 +1,406 @@
+"""Dynamic CLOCK admission (`repro.featcache.dynamic`): the extended
+device counters, the epoch-boundary refill against its pure-numpy oracle
+(slot-for-slot, including hand position and tie-breaking), the trainer
+integration (bit-identical losses with an evolving cache), and bit-exact
+checkpoint/resume of the full `DynamicCacheState`.
+
+Invariant -> test map (mirrored in the README testing section):
+  counters == mirror .......... test_ref_updates_matches_numpy_mirror
+  refill == numpy oracle ...... test_refill_matches_numpy_oracle
+                                test_pallas_counter_pipeline_matches_numpy
+  residency consistency ....... test_refill_preserves_residency_invariants
+  tie-breaking (shared rule) .. test_refill_tie_breaking
+  read-path purity ............ test_trainer_dynamic_cache_bit_identical
+  epoch-boundary adaptation ... test_trainer_dynamic_cache_adapts
+  eval isolation .............. test_eval_does_not_feed_admission
+  dynamic <= static ........... test_dynamic_not_worse_than_static_replay
+  bit-exact resume ............ test_resume_dynamic_cache_bit_exact
+"""
+import tempfile
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import featcache
+from repro.batching import CapsCalibrator, make_policy
+from repro.batching.policy import CommRandPolicy
+from repro.configs.base import GNNConfig, TrainConfig
+from repro.featcache import dynamic
+from repro.featcache.dynamic import DynamicCacheState
+from repro.kernels.gather_cached.ops import cache_ref_updates, gather_cached
+from repro.train.gnn_loop import GNNTrainer
+
+
+def _random_state(rng, n, c, f, max_freq=4):
+    """A mid-epoch DynamicCacheState with random bits/frequencies (small
+    `max_freq` forces plenty of TIES) + the matching numpy feats."""
+    feats = rng.normal(size=(n, f)).astype(np.float32)
+    ids = np.sort(rng.choice(n, size=c, replace=False))
+    pos = np.full(n, -1, np.int32)
+    pos[ids] = np.arange(c, dtype=np.int32)
+    state = DynamicCacheState(
+        cache=jnp.asarray(feats[ids]),
+        pos=jnp.asarray(pos),
+        slot_ids=jnp.asarray(ids.astype(np.int32)),
+        refbit=jnp.asarray(rng.integers(0, 2, c).astype(np.int32)),
+        slot_freq=jnp.asarray(rng.integers(0, max_freq, c).astype(np.int32)),
+        freq=jnp.asarray(rng.integers(0, max_freq, n).astype(np.int32)),
+        hand=jnp.asarray(int(rng.integers(0, c)), jnp.int32),
+        capacity=c, policy="test")
+    return state, feats
+
+
+def _np_states_equal(a, b):
+    return all(np.array_equal(a[k], b[k]) for k in a) and a.keys() == b.keys()
+
+
+# ---------------------------------------------------------------------------
+# extended counters: device == numpy mirror, consistent with cache_stats
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([16, 50, 200]), c=st.sampled_from([1, 7, 40]),
+       m=st.sampled_from([4, 33, 128]), seed=st.integers(0, 1000))
+def test_ref_updates_matches_numpy_mirror(n, c, m, seed):
+    rng = np.random.default_rng(seed)
+    c = min(c, n)
+    state, _ = _random_state(rng, n, c, 4)
+    # include padded (>= n) and negative entries: excluded everywhere
+    ids = np.where(rng.random(m) < 0.15, n, rng.integers(-1, n, m))
+    sh_d, nm_d = cache_ref_updates(state.pos, jnp.asarray(ids, jnp.int32), c)
+    sh_np, nm_np = featcache.cache_ref_updates_np(np.asarray(state.pos),
+                                                  ids, c)
+    np.testing.assert_array_equal(np.asarray(sh_d), sh_np)
+    np.testing.assert_array_equal(np.asarray(nm_d), nm_np)
+    # the vectors sum to the scalar counters (ONE counting rule)
+    h, ms = featcache.cache_stats(state.pos, jnp.asarray(ids, jnp.int32), n)
+    assert int(sh_d.sum()) == int(h) and int(nm_d.sum()) == int(ms)
+    # and ref_updates/with_refs fold them identically to the np mirror
+    st2 = dynamic.with_refs(state, dynamic.ref_updates(
+        state, jnp.asarray(ids, jnp.int32)))
+    snp = dynamic.ref_updates_np(dynamic.state_to_np(state), ids)
+    assert _np_states_equal(dynamic.state_to_np(st2), snp)
+
+
+# ---------------------------------------------------------------------------
+# refill: jitted device path == pure-numpy CLOCK oracle, slot for slot
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([12, 40, 90]), c=st.sampled_from([1, 2, 5, 16]),
+       max_freq=st.sampled_from([1, 2, 5]), seed=st.integers(0, 10_000))
+def test_refill_matches_numpy_oracle(n, c, max_freq, seed):
+    """Exact slot-for-slot equivalence on states dense with frequency
+    ties: residency, rows, reference bits (including the ones a
+    victimless walk leaves cleared), accumulator resets, hand position,
+    and the admitted count."""
+    rng = np.random.default_rng(seed)
+    c = min(c, n)
+    state, feats = _random_state(rng, n, c, 4, max_freq=max_freq)
+    before = dynamic.state_to_np(state)
+    st2, adm = dynamic.refill(state, jnp.asarray(feats))
+    oracle, adm_np = dynamic.refill_np(before, feats)
+    assert _np_states_equal(dynamic.state_to_np(st2), oracle)
+    assert int(adm) == adm_np
+    # epoch accumulators reset; the input state was not mutated
+    assert int(st2.freq.sum()) == 0 and int(st2.slot_freq.sum()) == 0
+    assert _np_states_equal(dynamic.state_to_np(state), before)
+
+
+def test_pallas_counter_pipeline_matches_numpy():
+    """The full device loop the trainer runs — gather_cached (Pallas
+    path; interpret mode on CPU/CI) -> ref_updates -> refill — against
+    the all-numpy mirror pipeline over the same batches."""
+    rng = np.random.default_rng(5)
+    n, c, f = 60, 13, 32
+    state, feats = _random_state(rng, n, c, f, max_freq=1)
+    # zero the randomized accumulators: the pipeline starts an epoch
+    state = dynamic.with_refs(state, (jnp.zeros_like(state.refbit),
+                                      jnp.zeros_like(state.slot_freq),
+                                      jnp.zeros_like(state.freq)))
+    snp = dynamic.state_to_np(state)
+    for _ in range(4):
+        ids = np.where(rng.random(25) < 0.1, n, rng.integers(0, n, 25))
+        out, h, m = gather_cached(state.cache, jnp.asarray(feats),
+                                  state.pos, jnp.asarray(ids, jnp.int32),
+                                  impl="pallas")
+        # served rows are exact copies wherever they live
+        np.testing.assert_array_equal(
+            np.asarray(out), feats[np.clip(ids, 0, n - 1)])
+        state = dynamic.with_refs(state, dynamic.ref_updates(
+            state, jnp.asarray(ids, jnp.int32)))
+        snp = dynamic.ref_updates_np(snp, ids)
+    state, adm = dynamic.refill(state, jnp.asarray(feats))
+    snp, adm_np = dynamic.refill_np(snp, feats)
+    assert _np_states_equal(dynamic.state_to_np(state), snp)
+    assert int(adm) == adm_np
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([30, 80]), c=st.sampled_from([3, 9, 20]),
+       seed=st.integers(0, 10_000))
+def test_refill_preserves_residency_invariants(n, c, seed):
+    """After any refill: pos/slot_ids stay a bijection, every cache row
+    is an EXACT copy of its node's feature row (the bit-exactness the
+    loss-trajectory guarantee rides on), and admitted rows come from the
+    missed non-resident candidates."""
+    rng = np.random.default_rng(seed)
+    c = min(c, n)
+    state, feats = _random_state(rng, n, c, 8)
+    missed = set(np.where((np.asarray(state.pos) < 0)
+                          & (np.asarray(state.freq) > 0))[0])
+    resident_before = set(int(i) for i in np.asarray(state.slot_ids))
+    st2, adm = dynamic.refill(state, jnp.asarray(feats))
+    pos, sid = np.asarray(st2.pos), np.asarray(st2.slot_ids)
+    assert len(set(sid)) == c                       # all distinct, none empty
+    for s, node in enumerate(sid):
+        assert node >= 0 and pos[node] == s
+    assert np.count_nonzero(pos >= 0) == c
+    np.testing.assert_array_equal(np.asarray(st2.cache), feats[sid])
+    newcomers = set(int(i) for i in sid) - resident_before
+    assert len(newcomers) == int(adm)
+    assert newcomers <= missed
+
+
+def test_refill_tie_breaking():
+    """`CLOCK_TIE_BREAK` on the refill side, pinned slot-for-slot."""
+    def state(pos_ids, n, refbit, slot_freq, freq, hand):
+        c = len(pos_ids)
+        feats = np.arange(n, dtype=np.float32).reshape(n, 1).repeat(2, 1)
+        pos = np.full(n, -1, np.int32)
+        pos[np.asarray(pos_ids)] = np.arange(c, dtype=np.int32)
+        return DynamicCacheState(
+            cache=jnp.asarray(feats[np.asarray(pos_ids)]),
+            pos=jnp.asarray(pos),
+            slot_ids=jnp.asarray(np.asarray(pos_ids, np.int32)),
+            refbit=jnp.asarray(np.asarray(refbit, np.int32)),
+            slot_freq=jnp.asarray(np.asarray(slot_freq, np.int32)),
+            freq=jnp.asarray(np.asarray(freq, np.int32)),
+            hand=jnp.asarray(hand, jnp.int32),
+            capacity=c, policy="t"), jnp.asarray(feats)
+
+    # rule 4: equal-frequency candidates admitted in ascending node id —
+    # nodes 5,6,7 all have freq 2, two cold slots: 5 and 6 get them
+    st, feats = state([0, 1, 2], 8, [0, 0, 0], [9, 0, 0],
+                      [0, 0, 0, 0, 0, 2, 2, 2], hand=1)
+    st2, adm = dynamic.refill(st, feats)
+    assert int(adm) == 2
+    assert list(np.asarray(st2.slot_ids)) == [0, 5, 6]
+    # rule 5: candidate at EQUAL frequency to every occupant -> incumbent
+    # stays (strictly-greater gate), nothing admitted
+    st, feats = state([0, 1, 2], 6, [0, 0, 0], [2, 2, 2],
+                      [0, 0, 0, 2, 2, 2], hand=0)
+    st2, adm = dynamic.refill(st, feats)
+    assert int(adm) == 0
+    assert list(np.asarray(st2.slot_ids)) == [0, 1, 2]
+    # rule 1: all slots clear and equally cold -> victim is the slot AT
+    # the hand, hand advances one past it
+    st, feats = state([0, 1, 2], 6, [0, 0, 0], [0, 0, 0],
+                      [0, 0, 0, 5, 0, 0], hand=2)
+    st2, adm = dynamic.refill(st, feats)
+    assert int(adm) == 1
+    assert list(np.asarray(st2.slot_ids)) == [0, 1, 3]
+    assert int(st2.hand) == 0
+    # rule 1 + second chance: referenced slot at the hand survives with
+    # its bit stripped; the NEXT clear slot is the victim
+    st, feats = state([0, 1, 2], 6, [0, 1, 0], [0, 9, 0],
+                      [0, 0, 0, 5, 0, 0], hand=1)
+    st2, adm = dynamic.refill(st, feats)
+    assert int(adm) == 1
+    assert list(np.asarray(st2.slot_ids)) == [0, 1, 3]
+    assert not np.asarray(st2.refbit).any()
+    assert int(st2.hand) == 0
+
+
+# ---------------------------------------------------------------------------
+# plan/state normalization
+# ---------------------------------------------------------------------------
+def test_as_cache_and_to_dynamic(tiny_graph):
+    g = tiny_graph
+    pol = make_policy("comm_rand", mix=0.0, p=1.0)
+    kw = dict(policy=pol, batch_size=128, fanouts=(4, 4), seed=0,
+              capacity=200)
+    assert featcache.as_cache(None, g, **kw) is None
+    plan = featcache.build_plan(g, "degree_hot", capacity=200)
+    assert featcache.as_cache(plan, g, **kw) is plan
+    stat = featcache.as_cache("degree_hot", g, **kw)
+    assert isinstance(stat, featcache.CachePlan)
+    dyn = featcache.as_cache("dynamic:degree_hot", g, **kw)
+    assert isinstance(dyn, DynamicCacheState)
+    assert featcache.as_cache(dyn, g, **kw) is dyn
+    # to_dynamic: same residency, idle CLOCK machinery
+    d2 = plan.to_dynamic()
+    np.testing.assert_array_equal(np.asarray(d2.pos), np.asarray(plan.pos))
+    np.testing.assert_array_equal(d2.cached_ids(), plan.cached_ids())
+    np.testing.assert_array_equal(np.asarray(d2.cache),
+                                  np.asarray(plan.cache))
+    assert int(d2.hand) == 0 and int(d2.refbit.sum()) == 0
+    assert "clock[degree_hot]" in d2.describe()
+    # default dynamic seed admission is presampled_freq
+    dyn2 = featcache.as_cache("dynamic", g, **kw)
+    assert "presampled_freq" in dyn2.policy
+
+
+# ---------------------------------------------------------------------------
+# trainer integration
+# ---------------------------------------------------------------------------
+def _trainers(g, cal, cache, policy="comm_rand", seed=0, **kw):
+    cfg = GNNConfig("t", "sage", 2, 32, g.feat_dim, g.num_classes,
+                    fanout=(4, 4), dropout=0.5)
+    tcfg = TrainConfig(batch_size=64, max_epochs=3)
+    return GNNTrainer(g, cfg, tcfg, policy, seed=seed, calibrator=cal,
+                      cache=cache, **kw)
+
+
+def test_trainer_dynamic_cache_bit_identical(tiny_graph):
+    """The 20-step loss-trajectory bit-match, WITH the cache evolving:
+    train_steps crosses the epoch boundary, so a refill lands inside the
+    window — rows are exact copies, so residency never touches the
+    loss."""
+    g = tiny_graph
+    cal = CapsCalibrator(seed=0)
+    t0 = _trainers(g, cal, None)
+    t1 = _trainers(g, cal, "dynamic:degree_hot", cache_frac=0.3)
+    assert isinstance(t1.cache, DynamicCacheState)
+    assert t1.stream.cache is t1.cache
+    nb = t1.stream.num_batches(0)
+    l0, l1 = t0.train_steps(nb + 5), t1.train_steps(nb + 5)
+    assert l0 == l1                       # bit-identical trajectory
+    assert t1.cache_meter.refills > 0     # ...while the cache churned
+    assert t1.stream.cache is t1.cache    # plumbing follows the state
+    assert t0.cache_meter.total == 0 and t1.cache_meter.total > 0
+
+
+def test_trainer_dynamic_cache_adapts(tiny_graph):
+    """run_epoch fires exactly one refill per epoch boundary; residency
+    stays consistent; the meter reports the per-epoch hit-rate/churn
+    trajectory; accumulators are reset for the next epoch."""
+    g = tiny_graph
+    cal = CapsCalibrator(seed=0)
+    t = _trainers(g, cal, "dynamic:degree_hot", cache_frac=0.3)
+    seeded = np.asarray(t.cache.slot_ids).copy()
+    ems = [t.run_epoch(1e-3) for _ in range(2)]
+    traj = t.cache_meter.trajectory
+    assert len(traj) == 2
+    assert [e["cache_refill"] for e in ems] == \
+        [x["refills"] for x in traj]
+    assert t.cache_meter.refills == sum(x["refills"] for x in traj)
+    assert traj[0]["refills"] > 0         # degree_hot seed must churn
+    assert not np.array_equal(np.asarray(t.cache.slot_ids), seeded)
+    assert 0.0 < ems[1]["cache_hit"] < 1.0
+    # post-refill: fresh accumulators, consistent residency, exact rows
+    assert int(t.cache.freq.sum()) == 0
+    assert int(t.cache.slot_freq.sum()) == 0
+    pos, sid = np.asarray(t.cache.pos), np.asarray(t.cache.slot_ids)
+    assert all(pos[sid[s]] == s for s in range(len(sid)))
+    np.testing.assert_array_equal(np.asarray(t.cache.cache),
+                                  g.features[sid].astype(np.float32))
+
+
+def test_eval_does_not_feed_admission(tiny_graph):
+    """Evaluation reads through the cache but must not move the CLOCK:
+    only the TRAINING distribution drives admission."""
+    g = tiny_graph
+    cal = CapsCalibrator(seed=0)
+    t = _trainers(g, cal, "dynamic:degree_hot", cache_frac=0.3)
+    t.train_steps(3)
+    before = dynamic.state_to_np(t.cache)
+    ev = t.evaluate(g.val_ids)
+    assert 0.0 <= ev["acc"] <= 1.0
+    assert _np_states_equal(dynamic.state_to_np(t.cache), before)
+
+
+def test_dynamic_not_worse_than_static_replay(tiny_graph):
+    """The fig10 acceptance inequality at test scale: on a replayed
+    stream, the adapted CLOCK cache misses at most as many rows per batch
+    as the static plan it was seeded from (the refill only swaps in rows
+    that out-accessed their victims)."""
+    g = tiny_graph
+    pol = make_policy("comm_rand", mix=0.0, p=1.0)
+    stream = featcache.policy_access_stream(g, pol, 128, (4, 4),
+                                            n_batches=4, seed=7)
+    for cap in (100, 400, 800):
+        plan = featcache.build_plan(g, "presampled_freq", capacity=cap,
+                                    policy=pol, batch_size=128,
+                                    fanouts=(4, 4), seed=9)
+        static = sum(featcache.cache_stats_np(
+            np.asarray(plan.pos), ids, g.num_nodes)[1] for ids in stream)
+        state = plan.to_dynamic()
+        for e in range(2):
+            miss = 0
+            for ids in stream:
+                d = jnp.asarray(ids, jnp.int32)
+                miss += int(featcache.cache_stats(state.pos, d,
+                                                  g.num_nodes)[1])
+                state = dynamic.with_refs(
+                    state, dynamic.ref_updates(state, d))
+            if e == 0:
+                assert miss == static     # pass 1 IS the static plan
+                state, _ = dynamic.refill(state, jnp.asarray(g.features))
+        assert miss <= static, (cap, miss, static)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end resume: dynamic cache + comm_rand roots + LABOR sampler
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class _CommRandLabor(CommRandPolicy):
+    """comm_rand root ordering trained through the LABOR shared-randomness
+    sampler — the cross-product the resume contract must cover (epoch-key
+    sampling state AND evolving cache state both derive from the
+    cursor/checkpoint)."""
+
+    def sampler_spec(self):
+        return ("labor", {})
+
+    def describe(self):
+        return super().describe() + "+labor"
+
+
+def test_resume_dynamic_cache_bit_exact(tiny_graph):
+    """GNNTrainer with dynamic cache + comm_rand policy + labor sampler,
+    checkpointed mid-training (one step past an epoch-boundary refill),
+    resumes with a bit-identical loss trajectory and a bit-identical
+    `DynamicCacheState` vs the uninterrupted run."""
+    g = tiny_graph
+    pol = _CommRandLabor("comm_rand", 0.0, 1.0)
+    cal = CapsCalibrator(seed=0)
+
+    def mk(d, every=0):
+        return _trainers(g, cal, "dynamic:degree_hot", policy=pol,
+                         cache_frac=0.3, ckpt_dir=d, ckpt_every=every)
+
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        a = mk(d1)
+        assert a.sampler.describe().startswith("labor")
+        nb = a.stream.num_batches(0)
+        la = a.train_steps(nb + 5)        # straight through the refill
+        b = mk(d2, every=1)
+        b.train_steps(nb + 2)             # "crash" 2 steps past the refill
+        del b
+        b2 = mk(d2, every=1)
+        assert b2.global_step == nb + 2   # resumed, mid-epoch cursor
+        assert b2.stream.cursor.state() == {"epoch": 1, "pos": 2}
+        lb = b2.train_steps(3)
+        assert la[nb + 2:] == lb          # bit-identical continuation
+        assert _np_states_equal(dynamic.state_to_np(a.cache),
+                                dynamic.state_to_np(b2.cache))
+        assert a.cache.capacity == b2.cache.capacity
+        assert a.cache.policy == b2.cache.policy
+
+
+def test_fit_reports_dynamic_cache_metrics(tiny_graph):
+    """fit() surfaces the trajectory: per-epoch hit rate + refill churn
+    in EpochMetrics, run totals in TrainResult."""
+    g = tiny_graph
+    cal = CapsCalibrator(seed=0)
+    t = _trainers(g, cal, "dynamic:degree_hot", cache_frac=0.3)
+    res = t.fit()
+    assert res.cache.startswith("clock[degree_hot]")
+    assert 0.0 < res.cache_hit_rate < 1.0
+    assert res.cache_refills == t.cache_meter.refills > 0
+    assert [h.cache_refills for h in res.history] == \
+        [x["refills"] for x in t.cache_meter.trajectory[:len(res.history)]]
