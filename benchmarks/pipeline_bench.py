@@ -1,0 +1,161 @@
+"""Batch-pipeline throughput: sync `BatchStream` vs `repro.pipeline`'s
+async prefetcher, merged into `BENCH_kernels.json` under `pipeline/*`.
+
+Per variant the bench drives a consumer loop that mimics a train step (a
+jitted stack of matmuls over the batch's gathered feature rows) and
+measures:
+
+  batches_per_s       delivered batch rate, consumer work included
+  consumer_stall_frac fraction of wall time the consumer spends BLOCKED
+                      waiting for the next batch (the device-idle proxy:
+                      while the consumer is stalled there is no train
+                      step in flight)
+  us_per_batch        1e6 / batches_per_s
+
+plus the per-stage build breakdown (`pipeline/build_breakdown`: roots /
+sample / dedup, from `repro.pipeline.stage_times`) and the device-order
+bit-match verdict for every registered policy
+(`pipeline/order_bitmatch`, the mirror contract CI asserts on).
+
+    PYTHONPATH=src python benchmarks/pipeline_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import dataset, emit, write_bench_json
+from repro.batching import BatchStream, make_policy
+from repro.pipeline import AsyncBatchStream, order_bitmatch
+from repro.pipeline.builder import stage_times
+
+POLICY = ("comm_rand", {"mix": 0.125, "p": 1.0})
+FANOUTS = (10, 10)
+ALL_POLICIES = (("rand", {}), ("norand", {}),
+                ("comm_rand", {"mix": 0.125}), ("clustergcn", {}),
+                ("labor", {}))
+
+
+def _consumer(feats, dim: int, depth: int = 4):
+    """A stand-in train step: gather the batch's feature rows, push them
+    through `depth` jitted matmuls. Heavy enough that an async producer
+    has real device time to hide behind."""
+    w = jax.random.normal(jax.random.key(42), (dim, dim),
+                          jnp.float32) / np.sqrt(dim)
+
+    @jax.jit
+    def step(ids, mask):
+        x = feats[jnp.minimum(ids, feats.shape[0] - 1)]
+        x = x * mask[:, None]
+        for _ in range(depth):
+            x = jnp.tanh(x @ w)
+        return x.sum()
+
+    return step
+
+
+def _drive(stream, step, n: int, warm: int = 3) -> dict:
+    """Pull `n` batches through `stream`, running `step` per batch; split
+    wall time into waiting-for-batch vs consumer work."""
+    it = iter(stream)
+    for _ in range(warm):                       # compile + fill the queue
+        b = next(it)
+        jax.block_until_ready(step(b.node_ids, b.node_mask))
+    wait = 0.0
+    t0 = time.perf_counter()
+    for _ in range(n):
+        ta = time.perf_counter()
+        b = next(it)
+        jax.block_until_ready(b.node_ids)       # batch ready to consume
+        wait += time.perf_counter() - ta
+        jax.block_until_ready(step(b.node_ids, b.node_mask))
+    total = time.perf_counter() - t0
+    return {"batches_per_s": n / total,
+            "us_per_batch": total / n * 1e6,
+            "consumer_stall_frac": wait / total}
+
+
+def main(smoke: bool = False):
+    graph_name = "tiny" if smoke else "reddit-like"
+    batch = 256 if smoke else 512
+    n = 12 if smoke else 60
+    g = dataset(graph_name)
+    caps = (4096, 8192) if smoke else (8192, 16384)
+    pol = make_policy(POLICY[0], **POLICY[1])
+    kw = dict(batch_size=batch, fanouts=FANOUTS, caps=caps, seed=0)
+
+    entries = {}
+
+    # mirror contract first: device epoch order == numpy, all policies
+    bitmatch = {}
+    for name, pkw in ALL_POLICIES:
+        bitmatch[name] = bool(order_bitmatch(
+            g, make_policy(name, **pkw), seed=0, epochs=(0, 1)))
+        emit(f"pipeline/order_bitmatch/{name}", 0.0,
+             f"bitmatch={bitmatch[name]}")
+    entries["pipeline/order_bitmatch"] = dict(bitmatch, graph=graph_name)
+
+    feats = jnp.asarray(g.features, jnp.float32)
+    step = _consumer(feats, g.feat_dim)
+
+    def best_of(factory, runs: int = 2):
+        """Best-of-`runs` measurement (fresh stream each run: timing
+        noise on shared CI runners shouldn't decide sync-vs-async)."""
+        best = None
+        for _ in range(runs):
+            stream = factory()
+            try:
+                r = _drive(stream, step, n)
+            finally:
+                getattr(stream, "close", lambda: None)()
+            if best is None or r["batches_per_s"] > best["batches_per_s"]:
+                best = r
+        return best
+
+    sync = BatchStream(g, pol, **kw)      # kept for breakdown inputs below
+    res_sync = best_of(lambda: BatchStream(g, pol, **kw))
+    emit(f"pipeline/sync/{graph_name}", res_sync["us_per_batch"],
+         f"batches_per_s={res_sync['batches_per_s']:.1f} "
+         f"stall={res_sync['consumer_stall_frac']:.3f}")
+    entries["pipeline/sync"] = dict(res_sync, graph=graph_name,
+                                    batch=batch)
+
+    res_async = best_of(lambda: AsyncBatchStream(g, pol, **kw))
+    emit(f"pipeline/async/{graph_name}", res_async["us_per_batch"],
+         f"batches_per_s={res_async['batches_per_s']:.1f} "
+         f"stall={res_async['consumer_stall_frac']:.3f}")
+    entries["pipeline/async"] = dict(res_async, graph=graph_name,
+                                     batch=batch, depth=2)
+
+    speedup = res_async["batches_per_s"] / res_sync["batches_per_s"]
+    emit(f"pipeline/speedup/{graph_name}", 0.0, f"async/sync={speedup:.3f}")
+    entries["pipeline/speedup"] = {"async_over_sync": speedup,
+                                   "graph": graph_name}
+
+    # per-stage split of one representative batch build
+    roots = sync.root_batches(0)[0]
+    bd = stage_times(sync.g, jnp.asarray(roots, jnp.int32), sync.labels,
+                     FANOUTS, caps, sync.sampler,
+                     key=sync.batch_key(0, 0),
+                     epoch_key=sync.epoch_key(0),
+                     iters=3 if smoke else 10)
+    emit(f"pipeline/build_breakdown/{graph_name}",
+         sum(bd.values()),
+         " ".join(f"{k}={v:.0f}" for k, v in bd.items()))
+    entries["pipeline/build_breakdown"] = dict(
+        {k: round(v, 1) for k, v in bd.items()},
+        graph=graph_name, policy=pol.describe())
+
+    write_bench_json(entries)
+    assert all(bitmatch.values()), f"device order mismatch: {bitmatch}"
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny graph, few batches (CI)")
+    main(**vars(ap.parse_args()))

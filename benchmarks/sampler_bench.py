@@ -21,6 +21,7 @@ import numpy as np
 from benchmarks.common import dataset, emit, timer_us, write_bench_json
 from repro import sampling
 from repro.core import minibatch as mb
+from repro.pipeline.builder import stage_times
 from repro.core.reorder import community_permutation
 from repro.graphs import synthetic
 from repro.graphs.csr import DeviceGraph, reorder
@@ -70,12 +71,19 @@ def main(full: bool = False):
         us = timer_us(build, 0, warmup=1, iters=3)
         uniq = float(np.mean([int(build(j).num_unique)
                               for j in range(n_batches)]))
+        # per-stage split (roots prep / neighbor sample / dedup+remap) of
+        # the same build — where each sampler actually spends its time
+        bd = stage_times(gd, jnp.asarray(batches[0], jnp.int32), labels,
+                         fanouts, caps, s,
+                         key=jax.random.fold_in(epoch_key, 0),
+                         epoch_key=epoch_key, iters=6 if full else 3)
         foot[s.describe()] = uniq
         emit(f"sampler_sweep/{GRAPH}/{s.describe()}", us,
              f"mean_unique_nodes={uniq:.0f}")
         entries[f"sampler_sweep/{s.describe()}"] = {
             "build_us": us, "mean_unique_nodes": uniq, "graph": GRAPH,
-            "batch": BATCH, "fanouts": list(fanouts)}
+            "batch": BATCH, "fanouts": list(fanouts),
+            "build_breakdown_us": {k: round(v, 1) for k, v in bd.items()}}
 
     # §6.3 acceptance: shared-randomness LABOR beats independent sampling
     # on footprint at equal fanout, without community info

@@ -50,6 +50,13 @@ def main():
                          "and refill churn print per epoch")
     ap.add_argument("--cache-frac", type=float, default=0.2,
                     help="cache capacity as a fraction of N (with --cache)")
+    ap.add_argument("--pipeline", default="sync",
+                    choices=["sync", "async"],
+                    help="batch pipeline: 'sync' = classic BatchStream; "
+                         "'async' = repro.pipeline's depth-2 background "
+                         "prefetcher over the fused on-device builder "
+                         "(bit-exact same batches, overlapped with the "
+                         "train step)")
     args = ap.parse_args()
 
     g = prepare(synthetic.load(args.dataset),
@@ -63,7 +70,8 @@ def main():
     tr = GNNTrainer(g, cfg, tcfg, pol, seed=0, ckpt_dir=args.ckpt_dir,
                     ckpt_every=args.ckpt_every,
                     calibrator=CapsCalibrator(cache_path=args.caps_cache),
-                    cache=args.cache, cache_frac=args.cache_frac).warmup()
+                    cache=args.cache, cache_frac=args.cache_frac,
+                    pipeline=args.pipeline).warmup()
     print(f"calibrated caps: {tr.caps}")
     if tr.cache is not None:
         print(f"feature cache: {tr.cache.describe()}")

@@ -115,7 +115,10 @@ class CommRandPolicy:
     def epoch_order(self, train_ids: np.ndarray, communities: np.ndarray,
                     rng: np.random.Generator) -> np.ndarray:
         if self.root_mode == "rand":
-            return rng.permutation(train_ids)
+            # hash-keyed permutation (one epoch_words draw) — the same
+            # closed form the device mirror computes under jit
+            return train_ids[order_mod.hash_perm(
+                len(train_ids), order_mod.epoch_words(rng))]
         groups = order_mod.community_groups(train_ids, communities)
         if self.root_mode == "norand":
             return np.concatenate(groups)
@@ -173,7 +176,7 @@ class ClusterGCNPolicy:
     def community_order(self, communities: np.ndarray,
                         rng: np.random.Generator) -> List[np.ndarray]:
         n_comm = int(communities.max()) + 1
-        order = rng.permutation(n_comm)
+        order = order_mod.hash_perm(n_comm, order_mod.epoch_words(rng))
         return np.split(order, range(self.parts_per_batch, n_comm,
                                      self.parts_per_batch))
 
@@ -238,7 +241,8 @@ class LaborPolicy:
 
     def epoch_order(self, train_ids: np.ndarray, communities: np.ndarray,
                     rng: np.random.Generator) -> np.ndarray:
-        return rng.permutation(train_ids)
+        return train_ids[order_mod.hash_perm(
+            len(train_ids), order_mod.epoch_words(rng))]
 
     def sampler_spec(self) -> Tuple[str, Dict]:
         return ("labor", {})

@@ -32,6 +32,7 @@ current residency.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Iterator, Optional
 
@@ -69,7 +70,8 @@ class BatchStream:
                  mode: str = "sample",
                  device_graph: Optional[DeviceGraph] = None,
                  labels: Optional[jnp.ndarray] = None,
-                 prefetch: bool = True, cache=None):
+                 dispatch_ahead: bool = True, cache=None,
+                 prefetch=None):
         self.graph = graph
         self.policy: BatchPolicy = as_policy(policy)
         self.batch_size = batch_size
@@ -94,11 +96,23 @@ class BatchStream:
             self.cache = featcache.as_cache(
                 cache, graph, policy=self.policy, batch_size=batch_size,
                 fanouts=self.fanouts, seed=seed)
-        self.prefetch = prefetch
+        if prefetch is not None:
+            # the old name oversold a single-slot async DISPATCH as
+            # prefetching — real depth-k prefetch on a background thread
+            # is `repro.pipeline.AsyncBatchStream`
+            warnings.warn(
+                "BatchStream(prefetch=...) is deprecated: the flag only "
+                "controls single-slot async dispatch and is now named "
+                "dispatch_ahead=; for actual background prefetching use "
+                "repro.pipeline.AsyncBatchStream", DeprecationWarning,
+                stacklevel=2)
+            dispatch_ahead = prefetch
+        self.dispatch_ahead = dispatch_ahead
         self.g = device_graph or DeviceGraph.from_graph(graph)
         self.labels = labels if labels is not None \
             else jnp.asarray(graph.labels)
         self._order_cache = (-1, None)        # (epoch, (n_batches, B) roots)
+        self._epoch_ctx = (-1, None)          # (epoch, shared sampler state)
         self._prefetched = None               # (epoch, pos, MiniBatch)
 
     # -- deterministic derivations ------------------------------------------
@@ -113,8 +127,11 @@ class BatchStream:
         return self._order_cache[1]
 
     def num_batches(self, epoch: int = None) -> int:
-        return len(self.root_batches(
-            self.cursor.epoch if epoch is None else epoch))
+        # closed form (every epoch visits the full train set), so async
+        # consumers can size an epoch without materializing its order
+        n = len(self.graph.train_ids)
+        return n // self.batch_size if self.drop_last \
+            else -(-n // self.batch_size)
 
     def epoch_key(self, epoch: int):
         """Epoch-level PRNG key — what shared-randomness samplers (LABOR)
@@ -125,35 +142,56 @@ class BatchStream:
         """PRNG key for batch (epoch, pos) — pure function of the cursor."""
         return jax.random.fold_in(self.epoch_key(epoch), pos)
 
+    def epoch_ctx(self, epoch: int):
+        """Per-epoch shared sampler state (LABOR's node ranks), computed
+        ONCE per epoch and threaded into every build — previously the
+        ranks were re-hashed inside every batch build."""
+        if self._epoch_ctx[0] != epoch:
+            self._epoch_ctx = (epoch, mb.sampler_epoch_ctx(
+                self.sampler, self.epoch_key(epoch), self.g))
+        return self._epoch_ctx[1]
+
     def build(self, roots: np.ndarray, epoch: int, pos: int) -> mb.MiniBatch:
         """Compile/dispatch the static-shape batch for these roots."""
-        return mb.build_batch(
-            self.batch_key(epoch, pos), self.g,
+        return mb._build_batch(
+            self.batch_key(epoch, pos), self.epoch_key(epoch), self.g,
             jnp.asarray(roots, jnp.int32), self.labels, self.fanouts,
-            self.caps, self.sampler, epoch_key=self.epoch_key(epoch))
+            self.caps, self.sampler, self.epoch_ctx(epoch))
 
     # -- iteration -----------------------------------------------------------
-    def _take(self, epoch: int, pos: int, batches: np.ndarray) -> mb.MiniBatch:
+    def _take(self, epoch: int, pos: int) -> mb.MiniBatch:
+        """Produce batch (epoch, pos) — the override point for async
+        streams. The base class consumes its single dispatched-ahead slot
+        or builds synchronously from the numpy epoch order."""
         if self._prefetched is not None and \
                 self._prefetched[:2] == (epoch, pos):
             batch = self._prefetched[2]
             self._prefetched = None
             return batch
-        return self.build(batches[pos], epoch, pos)
+        return self.build(self.root_batches(epoch)[pos], epoch, pos)
+
+    def _dispatch_ahead(self, epoch: int, pos: int) -> None:
+        """Fire off batch (epoch, pos) so it overlaps the consumer's
+        current step (async jit dispatch; no-op in async streams, which
+        have a real queue)."""
+        if self.dispatch_ahead:
+            self._prefetched = (epoch, pos,
+                                self.build(self.root_batches(epoch)[pos],
+                                           epoch, pos))
 
     def epoch(self) -> Iterator[mb.MiniBatch]:
         """Yield the REMAINDER of the current epoch (all of it when the
         cursor sits at pos 0), then advance the cursor to the next epoch.
         After each yield the cursor already points at the next batch, so a
         checkpoint taken mid-iteration resumes after the consumed batch."""
-        batches = self.root_batches(self.cursor.epoch)
-        if len(batches) and self.cursor.pos >= len(batches):
+        nb = self.num_batches(self.cursor.epoch)
+        if nb and self.cursor.pos >= nb:
             # a consumer stopped exactly on the epoch boundary: normalize
             self.cursor.epoch += 1
             self.cursor.pos = 0
             self._prefetched = None
-            batches = self.root_batches(self.cursor.epoch)
-        if len(batches) == 0:
+            nb = self.num_batches(self.cursor.epoch)
+        if nb == 0:
             # empty train set, or drop_last with fewer roots than a batch —
             # raising beats __iter__ spinning forever on empty epochs
             raise ValueError(
@@ -161,14 +199,12 @@ class BatchStream:
                 f"({len(self.graph.train_ids)} train ids, batch_size="
                 f"{self.batch_size}, drop_last={self.drop_last})")
         e = self.cursor.epoch
-        while self.cursor.epoch == e and self.cursor.pos < len(batches):
+        while self.cursor.epoch == e and self.cursor.pos < nb:
             pos = self.cursor.pos
-            batch = self._take(e, pos, batches)
+            batch = self._take(e, pos)
             self.cursor.pos += 1
-            if self.prefetch and self.cursor.pos < len(batches):
-                self._prefetched = (e, self.cursor.pos,
-                                    self.build(batches[self.cursor.pos], e,
-                                               self.cursor.pos))
+            if self.cursor.pos < nb:
+                self._dispatch_ahead(e, self.cursor.pos)
             yield batch
         if self.cursor.epoch == e:            # exhausted, not broken out of
             self.cursor.epoch += 1

@@ -73,11 +73,24 @@ def _positions(level: jnp.ndarray, ids: jnp.ndarray):
     return pos, ok
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("fanouts", "caps", "sampler"))
-def _build_batch(key, epoch_key, g: DeviceGraph, roots, labels_all,
-                 fanouts: Tuple[int], caps: Tuple[int],
-                 sampler) -> MiniBatch:
+def sampler_epoch_ctx(sampler, epoch_key, g: DeviceGraph):
+    """Per-epoch device state a shared-randomness sampler can precompute
+    once (LABOR's node ranks). None for samplers without one. The batch
+    builder computes it once per build; `repro.pipeline.DeviceBatchBuilder`
+    hoists it further, to once per EPOCH."""
+    fn = getattr(sampler, "epoch_ctx", None)
+    if sampler.shared_randomness and callable(fn):
+        return fn(epoch_key, g)
+    return None
+
+
+def _build_batch_impl(key, epoch_key, g: DeviceGraph, roots, labels_all,
+                      fanouts: Tuple[int], caps: Tuple[int],
+                      sampler, shared_ctx=None) -> MiniBatch:
+    """The (jit-traceable) build body, shared by the host-driven
+    `_build_batch` below and the fused on-device builder in
+    `repro.pipeline.builder` — ONE implementation so the async pipeline's
+    batch sequence is bit-exact against the synchronous stream."""
     N = g.num_nodes
     B = roots.shape[0]
     root_mask = roots >= 0
@@ -87,6 +100,12 @@ def _build_batch(key, epoch_key, g: DeviceGraph, roots, labels_all,
     labels = jnp.where(root_mask, labels_all[jnp.where(
         root_mask, roots, 0)], 0)
 
+    # shared per-epoch sampler state (LABOR ranks): computed once per
+    # build instead of once per hop — a pure function of the epoch key,
+    # so hoisting cannot change any pick
+    if shared_ctx is None:
+        shared_ctx = sampler_epoch_ctx(sampler, epoch_key, g)
+
     levels = [level]
     blocks = []
     keys = jax.random.split(key, len(fanouts))
@@ -95,7 +114,10 @@ def _build_batch(key, epoch_key, g: DeviceGraph, roots, labels_all,
         # shared-randomness samplers (LABOR) draw from the epoch key so the
         # same source node picks the same neighbors at every hop and batch
         k_h = epoch_key if sampler.shared_randomness else keys[h]
-        srcs, smask = sampler.sample(k_h, g, prev, r)
+        if shared_ctx is not None:
+            srcs, smask = sampler.sample(k_h, g, prev, r, ranks=shared_ctx)
+        else:
+            srcs, smask = sampler.sample(k_h, g, prev, r)
         all_ids = jnp.concatenate([prev, srcs.reshape(-1)])
         nxt = jnp.unique(all_ids, size=cap, fill_value=N).astype(jnp.int32)
         self_pos, self_ok = _positions(nxt, prev)
@@ -122,6 +144,15 @@ def _build_batch(key, epoch_key, g: DeviceGraph, roots, labels_all,
         labels=lab_sorted,
         label_mask=lmask & (levels[0] < N),
     )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fanouts", "caps", "sampler"))
+def _build_batch(key, epoch_key, g: DeviceGraph, roots, labels_all,
+                 fanouts: Tuple[int], caps: Tuple[int],
+                 sampler, shared_ctx=None) -> MiniBatch:
+    return _build_batch_impl(key, epoch_key, g, roots, labels_all,
+                             fanouts, caps, sampler, shared_ctx)
 
 
 def build_batch(key, g: DeviceGraph, roots, labels_all, fanouts: Tuple[int],

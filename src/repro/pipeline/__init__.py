@@ -1,0 +1,40 @@
+"""`repro.pipeline` — end-to-end on-device batch construction.
+
+The host batch-build path (numpy epoch order -> per-batch root slice ->
+host->device transfer -> jitted sample/dedup) starves the accelerator:
+`BENCH_kernels.json` `sampler_sweep/*` showed 46-232 ms per batch of host
+work against a ~3 ms jitted train step. This subsystem moves the whole
+root-ordering -> neighbor-sample -> dedup -> cap path onto the device and
+overlaps the build of batch k+1 with train step k:
+
+  device_order   jitted mirror of `batching/order.py`'s hash-keyed
+                 block-shuffle — per-epoch root permutations computed on
+                 device, bit-matched to the numpy path for every
+                 registered policy (rand/norand/comm_rand/clustergcn/
+                 labor)
+  builder        `DeviceBatchBuilder`: the epoch root order stays
+                 resident on device and one fused jit slices the roots
+                 for batch (epoch, pos) and runs the shared
+                 `_build_batch` body — no per-batch host->device root
+                 transfer, LABOR's shared ranks hoisted to one pass per
+                 epoch
+  prefetch       `AsyncBatchStream`: a depth-k (default 2) dispatch
+                 queue on a background thread, drop-in compatible with
+                 `BatchStream` (same `Cursor` checkpoint/resume
+                 semantics, bit-exact batch sequence vs the synchronous
+                 stream)
+
+`GNNTrainer(pipeline="async")` and `examples/train_gnn_commrand.py
+--pipeline async` select it; `benchmarks/pipeline_bench.py` measures
+batches/sec, the per-stage build breakdown, and the device-idle fraction
+for sync vs async into `BENCH_kernels.json` `pipeline/*`.
+"""
+from repro.pipeline.builder import DeviceBatchBuilder, stage_times
+from repro.pipeline.device_order import (OrderSpec, device_epoch_order,
+                                         order_bitmatch)
+from repro.pipeline.prefetch import AsyncBatchStream
+
+__all__ = [
+    "AsyncBatchStream", "DeviceBatchBuilder", "OrderSpec",
+    "device_epoch_order", "order_bitmatch", "stage_times",
+]

@@ -1,0 +1,191 @@
+"""Jitted on-device mirror of `repro.batching.order` (epoch root orders).
+
+`batching/order.py` computes every policy's per-epoch root permutation as
+a closed-form function of two uint32 epoch words: murmur-mix a position
+counter with the words, stable-argsort the keys. This module runs the SAME
+computation under `jax.jit`, so the per-epoch root order lives on device
+and never crosses the host boundary per batch.
+
+Bit-match contract: for every registered policy
+(rand/norand/comm_rand/clustergcn/labor),
+
+    device_epoch_order(OrderSpec.for_policy(graph, policy),
+                       epoch_words_for(seed, epoch))
+ ==  policy.epoch_order(graph.train_ids, graph.communities,
+                        np.random.default_rng((seed, epoch)))
+
+element for element. Both sides hash identical uint32 counters with
+identical constants (imported from `batching.order` — one source of
+truth) and break ties with stable argsorts over identical input layouts,
+so equality is structural, not statistical. CI re-checks it for all five
+policies on every run (`benchmarks/pipeline_bench.py`).
+
+The static layout (community-sorted ids, block boundaries, community-of-
+train) is precomputed ONCE per (graph, policy) in `OrderSpec`; per epoch
+only the two key words change.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.batching.order import (MIX_A, MIX_B, SALT_BLOCK, SALT_ELEM,
+                                  SALT_PERM, community_groups, epoch_words)
+
+
+def epoch_words_for(seed: int, epoch: int) -> np.ndarray:
+    """The two uint32 epoch words `BatchStream.root_batches` consumes:
+    the first (and only) Generator draw of `default_rng((seed, epoch))`."""
+    return epoch_words(np.random.default_rng((seed, epoch)))
+
+
+def _hash_u32(idx, words, salt: int):
+    """jnp twin of `batching.order.hash_u32` — op-for-op identical uint32
+    wraparound arithmetic (`salt` is a trace-time constant)."""
+    x = idx.astype(jnp.uint32)
+    for w in (words[0].astype(jnp.uint32) ^ jnp.uint32(salt),
+              words[1].astype(jnp.uint32)):
+        x = x ^ w
+        x = x * jnp.uint32(MIX_A)
+        x = x ^ (x >> jnp.uint32(13))
+        x = x * jnp.uint32(MIX_B)
+        x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+@jax.jit
+def _order_perm(words, ids):
+    """rand / labor roots: ids under a hash-keyed whole-set permutation."""
+    keys = _hash_u32(jnp.arange(ids.shape[0]), words, SALT_PERM)
+    return ids[jnp.argsort(keys, stable=True)]
+
+
+@functools.partial(jax.jit, static_argnames=("m",))
+def _order_comm_rand(words, ids, sizes, block_of, off_in_block, m: int):
+    """comm_rand: `block_shuffle_perm` verbatim, vectorized on device.
+    `ids` is the community-sorted concatenation (block 0 first); `m` is
+    the static super-block size max(1, round(mix * n_blocks))."""
+    n = sizes.shape[0]
+    bkey = _hash_u32(jnp.arange(n), words, SALT_BLOCK)
+    border = jnp.argsort(bkey, stable=True)
+    rank = jnp.zeros(n, jnp.int32).at[border].set(
+        jnp.arange(n, dtype=jnp.int32))
+    starts_shuf = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(sizes[border])[:-1]])
+    elem_rank = rank[block_of]
+    gpos = starts_shuf[elem_rank] + off_in_block
+    sb = elem_rank // m
+    idx = jnp.argsort(_hash_u32(gpos, words, SALT_ELEM), stable=True)
+    idx = idx[jnp.argsort(sb[idx], stable=True)]
+    return ids[idx]
+
+
+@functools.partial(jax.jit, static_argnames=("n_comm", "ppb"))
+def _order_clustergcn(words, ids, comm_of, n_comm: int, ppb: int):
+    """clustergcn: hash-permute community ids, merge consecutive groups of
+    `ppb` into unions, list train roots by (union, original position) —
+    the device twin of `ClusterGCNPolicy._grouped`'s bucketed pass."""
+    ckey = _hash_u32(jnp.arange(n_comm), words, SALT_PERM)
+    corder = jnp.argsort(ckey, stable=True)
+    rank_c = jnp.zeros(n_comm, jnp.int32).at[corder].set(
+        jnp.arange(n_comm, dtype=jnp.int32))
+    union = rank_c[comm_of] // ppb
+    return ids[jnp.argsort(union, stable=True)]
+
+
+@dataclass(frozen=True)
+class OrderSpec:
+    """Static per-(graph, policy) layout for the device order programs.
+
+    `ids` is the reference concatenation the per-epoch permutation is
+    applied to: train_ids as-is for rand/labor/clustergcn, the community-
+    sorted concatenation for norand/comm_rand. Everything here is computed
+    once at stream construction; per epoch only two uint32 words move.
+    """
+    kind: str                               # rand|norand|comm_rand|clustergcn
+    ids: jnp.ndarray                        # (T,) int32
+    sizes: Optional[jnp.ndarray] = None     # (n_blocks,) int32   [comm_rand]
+    block_of: Optional[jnp.ndarray] = None  # (T,) int32          [comm_rand]
+    off_in_block: Optional[jnp.ndarray] = None  # (T,) int32      [comm_rand]
+    m: int = 1                              # super-block size    [comm_rand]
+    comm_of: Optional[jnp.ndarray] = None   # (T,) int32          [clustergcn]
+    n_comm: int = 0                         # static              [clustergcn]
+    ppb: int = 1                            # parts_per_batch     [clustergcn]
+
+    @property
+    def num_train(self) -> int:
+        return int(self.ids.shape[0])
+
+    @staticmethod
+    def for_policy(graph, policy) -> "OrderSpec":
+        """Build the static layout for a registered policy. Raises
+        NotImplementedError for policies without a device order program
+        (the builder falls back to the host path for those)."""
+        name = getattr(policy, "name", None)
+        if name not in ("rand", "labor", "norand", "comm_rand",
+                        "clustergcn"):
+            raise NotImplementedError(
+                f"no device order program for policy {name!r}")
+        train = np.asarray(graph.train_ids)
+        if name in ("rand", "labor"):
+            return OrderSpec("rand", jnp.asarray(train, jnp.int32))
+        if name in ("norand", "comm_rand"):
+            groups = community_groups(train, graph.communities)
+            flat = np.concatenate(groups)
+            if name == "norand":
+                return OrderSpec("norand", jnp.asarray(flat, jnp.int32))
+            sizes = np.fromiter((len(g) for g in groups), np.int64,
+                                count=len(groups))
+            block_of = np.repeat(np.arange(len(groups)), sizes)
+            starts = np.zeros(len(groups), np.int64)
+            np.cumsum(sizes[:-1], out=starts[1:])
+            off = np.arange(len(flat)) - starts[block_of]
+            return OrderSpec(
+                "comm_rand", jnp.asarray(flat, jnp.int32),
+                sizes=jnp.asarray(sizes, jnp.int32),
+                block_of=jnp.asarray(block_of, jnp.int32),
+                off_in_block=jnp.asarray(off, jnp.int32),
+                m=max(1, int(round(policy.mix * len(groups)))))
+        if name == "clustergcn":
+            n_comm = int(graph.communities.max()) + 1
+            return OrderSpec(
+                "clustergcn", jnp.asarray(train, jnp.int32),
+                comm_of=jnp.asarray(graph.communities[train], jnp.int32),
+                n_comm=n_comm, ppb=int(policy.parts_per_batch))
+        raise AssertionError(name)      # unreachable: gated above
+
+
+def device_epoch_order(spec: OrderSpec, words) -> jnp.ndarray:
+    """(T,) int32 root ids for one epoch, computed on device. `words` is
+    `epoch_words_for(seed, epoch)` (host numpy or device array)."""
+    words = jnp.asarray(words, jnp.uint32)
+    if spec.kind == "norand":
+        return spec.ids
+    if spec.kind == "rand":
+        return _order_perm(words, spec.ids)
+    if spec.kind == "comm_rand":
+        return _order_comm_rand(words, spec.ids, spec.sizes, spec.block_of,
+                                spec.off_in_block, spec.m)
+    if spec.kind == "clustergcn":
+        return _order_clustergcn(words, spec.ids, spec.comm_of,
+                                 spec.n_comm, spec.ppb)
+    raise ValueError(spec.kind)
+
+
+def order_bitmatch(graph, policy, seed: int = 0, epochs=(0, 1)) -> bool:
+    """True iff the device order equals the numpy policy path bit-for-bit
+    for every epoch in `epochs` — the CI gate for the mirror contract."""
+    spec = OrderSpec.for_policy(graph, policy)
+    for epoch in epochs:
+        want = policy.epoch_order(graph.train_ids, graph.communities,
+                                  np.random.default_rng((seed, epoch)))
+        got = np.asarray(device_epoch_order(
+            spec, epoch_words_for(seed, epoch)))
+        if not np.array_equal(got.astype(np.int64), np.asarray(want)):
+            return False
+    return True

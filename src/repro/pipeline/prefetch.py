@@ -1,0 +1,144 @@
+"""`AsyncBatchStream`: depth-k background batch prefetching.
+
+A drop-in `BatchStream` whose batches are produced by a background
+producer thread through the fused `DeviceBatchBuilder` (device-resident
+epoch order, one jit dispatch per batch). A bounded queue of depth `k`
+(default 2 — double buffering) applies backpressure: while the trainer
+consumes step i the producer has already dispatched builds i+1..i+k, so
+sample/dedup for the next batches overlaps the current train step.
+
+    consumer   | step i        | step i+1      | step i+2
+    producer   | build i+1, i+2| build i+3     | ...
+
+The GIL does not serialize the useful work: the producer thread spends
+its time inside jit dispatch + XLA, which release the GIL, and jax
+dispatch is itself asynchronous.
+
+Determinism contract: identical to `BatchStream`. The producer walks the
+same (epoch, pos) cursor arithmetic and the builder derives every key
+from (seed, epoch, pos), so the delivered batch SEQUENCE is bit-exact
+against the synchronous stream — including after an external cursor
+reset (`Cursor.from_state` resume): `_take` detects that the requested
+cursor is not what the producer is about to deliver and restarts the
+producer from the restored cursor, discarding in-flight work.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+from repro.batching.stream import BatchStream
+from repro.core import minibatch as mb
+from repro.pipeline.builder import DeviceBatchBuilder
+
+_POLL_S = 0.05          # producer put/consumer get poll for shutdown checks
+
+
+class AsyncBatchStream(BatchStream):
+    """`BatchStream` with a depth-k background dispatch queue.
+
+    Same constructor plus `depth` (queue size, default 2). Checkpointing
+    is unchanged: `cursor.state()` / assigning a restored `Cursor` works
+    mid-epoch with builds in flight.
+    """
+
+    def __init__(self, *args, depth: int = 2, **kwargs):
+        # the base class's single-slot dispatch is superseded by the queue
+        kwargs.setdefault("dispatch_ahead", False)
+        super().__init__(*args, **kwargs)
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self.depth = depth
+        self.builder = DeviceBatchBuilder.from_stream(self)
+        self._queue = None          # queue.Queue of (epoch, pos, batch)
+        self._thread = None
+        self._gen = 0               # bumped on restart; stale producers exit
+        self._stop = threading.Event()
+        self._next_out = None       # (epoch, pos) at the queue's head
+
+    # -- producer -----------------------------------------------------------
+    def _advance(self, epoch: int, pos: int):
+        """Cursor arithmetic of `epoch()`: next (epoch, pos) delivered."""
+        if pos + 1 < self.num_batches(epoch):
+            return epoch, pos + 1
+        return epoch + 1, 0
+
+    def _produce(self, epoch: int, pos: int, gen: int, q) -> None:
+        try:
+            while not self._stop.is_set() and gen == self._gen:
+                if self.num_batches(epoch) == 0:
+                    return          # consumer raises; nothing to build
+                batch = self.builder.build(epoch, pos)
+                while gen == self._gen and not self._stop.is_set():
+                    try:
+                        q.put((epoch, pos, batch), timeout=_POLL_S)
+                        break
+                    except queue.Full:
+                        continue
+                epoch, pos = self._advance(epoch, pos)
+        except BaseException as exc:    # surface build errors to consumer
+            try:
+                q.put(("error", exc, None), timeout=1.0)
+            except queue.Full:
+                pass
+
+    def _restart(self, epoch: int, pos: int) -> None:
+        self._gen += 1              # in-flight producer drains out and exits
+        self._queue = queue.Queue(maxsize=self.depth)
+        self._next_out = (epoch, pos)
+        self._thread = threading.Thread(
+            target=self._produce, args=(epoch, pos, self._gen, self._queue),
+            name=f"AsyncBatchStream-{id(self):x}", daemon=True)
+        self._thread.start()
+
+    # -- consumer -----------------------------------------------------------
+    def _take(self, epoch: int, pos: int) -> mb.MiniBatch:
+        if self._thread is None or not self._thread.is_alive() \
+                or self._next_out != (epoch, pos):
+            # first use, or an external cursor reset (checkpoint resume):
+            # drop in-flight work and realign the producer
+            self._restart(epoch, pos)
+        q = self._queue
+        while True:
+            try:
+                item = q.get(timeout=_POLL_S)
+            except queue.Empty:
+                if self._thread is None or not self._thread.is_alive():
+                    raise RuntimeError(
+                        "AsyncBatchStream producer died without output")
+                continue
+            if item[0] == "error":
+                self.close()
+                raise item[1]
+            e, p, batch = item
+            if (e, p) != (epoch, pos):      # stale pre-restart leftover
+                continue
+            self._next_out = self._advance(epoch, pos)
+            return batch
+
+    def _dispatch_ahead(self, epoch: int, pos: int) -> None:
+        pass                        # the queue IS the lookahead
+
+    def close(self) -> None:
+        """Stop the producer and drop queued work (idempotent)."""
+        self._gen += 1
+        self._stop.set()
+        t, self._thread = self._thread, None
+        if t is not None and t.is_alive():
+            q = self._queue
+            while t.is_alive():     # unblock a producer stuck on put()
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    pass
+                t.join(timeout=_POLL_S)
+        self._queue = None
+        self._next_out = None
+        self._stop = threading.Event()   # close() then reuse => restart
+
+    def __del__(self):
+        try:
+            self._stop.set()
+            self._gen += 1
+        except Exception:
+            pass

@@ -222,8 +222,15 @@ class LaborSampler:
     def name(self) -> str:
         return "labor"
 
+    def epoch_ctx(self, key, g):
+        """The per-epoch shared state: every node's rank under the epoch
+        key. A pure function of (key, g.num_nodes) — `sample` recomputes
+        it when not given one, so hoisting it to once per epoch (the
+        batch builder / `repro.pipeline` do) changes no pick."""
+        return _hash_rank01(key, jnp.arange(g.num_nodes, dtype=jnp.int32))
+
     @functools.partial(jax.jit, static_argnames=("self", "fanout"))
-    def sample(self, key, g, nodes, fanout: int):
+    def sample(self, key, g, nodes, fanout: int, ranks=None):
         if g.max_degree == 0 and g.indices.shape[0] > 0:
             raise ValueError(
                 "DeviceGraph.max_degree is unset; rebuild the device graph "
@@ -236,9 +243,9 @@ class LaborSampler:
         offset = jnp.minimum(j[None, :], jnp.maximum(deg - 1, 0)[:, None])
         cand = g.indices[start[:, None] + offset]          # (M, D)
         # hash each of the N node ids once, then gather: N ops instead of
-        # re-mixing every element of the (M, D) candidate tile
-        rank_all = _hash_rank01(
-            key, jnp.arange(g.num_nodes, dtype=jnp.int32))
+        # re-mixing every element of the (M, D) candidate tile; callers
+        # that build many batches per epoch pass the hoisted `ranks`
+        rank_all = self.epoch_ctx(key, g) if ranks is None else ranks
         rank = jnp.where(in_row, rank_all[cand], jnp.inf)
         _, top = jax.lax.top_k(-rank, fanout)              # k smallest ranks
         src = jnp.take_along_axis(cand, top, axis=1)
@@ -250,11 +257,30 @@ class LaborSampler:
                                   g.num_nodes))
         return src.astype(jnp.int32), mask
 
+    @staticmethod
+    def epoch_ranks_np(key, num_nodes: int) -> np.ndarray:
+        """Numpy mirror of `epoch_ctx`: identical uint32 mixing of
+        arange(num_nodes) with the epoch key's raw words, identical
+        uint32->float32 rounding — bit-for-bit equal to the device ranks
+        (asserted in tests/test_batch_pipeline.py)."""
+        x = np.arange(num_nodes, dtype=np.uint32)
+        for w in np.asarray(jax.random.key_data(key)).ravel().astype(
+                np.uint32):
+            x = x ^ np.uint32(w)
+            x = x * np.uint32(0x85EBCA6B)
+            x = x ^ (x >> np.uint32(13))
+            x = x * np.uint32(0xC2B2AE35)
+            x = x ^ (x >> np.uint32(16))
+        return x.astype(np.float32) * np.float32(2.0 ** -32)
+
     def sample_level_np(self, rng, graph, level, fanout: int,
                         ctx: dict) -> List:
         rank = ctx.get("labor_rank")
         if rank is None:                    # one shared draw per epoch
-            rank = ctx["labor_rank"] = rng.random(graph.num_nodes)
+            ek = ctx.get("epoch_key")
+            rank = ctx["labor_rank"] = (
+                self.epoch_ranks_np(ek, graph.num_nodes)
+                if ek is not None else rng.random(graph.num_nodes))
         srcs = []
         for u in level:
             nbrs = graph.indices[graph.indptr[u]:graph.indptr[u + 1]]

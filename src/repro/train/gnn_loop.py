@@ -139,7 +139,7 @@ class GNNTrainer:
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
                  calibrator: Optional[CapsCalibrator] = None,
                  cache=None, cache_capacity: Optional[int] = None,
-                 cache_frac: float = 0.2):
+                 cache_frac: float = 0.2, pipeline: str = "sync"):
         self.graph = graph
         self.cfg = cfg
         self.tcfg = tcfg
@@ -178,7 +178,20 @@ class GNNTrainer:
             fanouts=self.fanouts, seed=seed)
         self.cache_meter = HitRateMeter()
         self._pending_stats = []      # device counters, synced per epoch
-        self.stream = BatchStream(
+        # pipeline="sync" is the classic BatchStream (host epoch order +
+        # single-slot async dispatch); "async" swaps in the depth-2
+        # background prefetcher over the fused on-device builder
+        # (`repro.pipeline`) — same Cursor semantics, bit-exact batches
+        if pipeline not in ("sync", "async"):
+            raise ValueError(
+                f"pipeline must be 'sync' or 'async', got {pipeline!r}")
+        if pipeline == "async":
+            from repro.pipeline import AsyncBatchStream
+            stream_cls = AsyncBatchStream
+        else:
+            stream_cls = BatchStream
+        self.pipeline = pipeline
+        self.stream = stream_cls(
             graph, self.policy, tcfg.batch_size, self.fanouts, self.caps,
             seed=seed, device_graph=self.g, labels=self.labels,
             cache=self.cache)
@@ -440,8 +453,8 @@ def train_once(graph: Graph, cfg: GNNConfig, policy,
                tcfg: Optional[TrainConfig] = None, seed: int = 0,
                verbose: bool = False,
                calibrator: Optional[CapsCalibrator] = None,
-               cache=None) -> TrainResult:
+               cache=None, pipeline: str = "sync") -> TrainResult:
     tcfg = tcfg or TrainConfig()
     return GNNTrainer(graph, cfg, tcfg, policy, seed=seed,
-                      calibrator=calibrator,
-                      cache=cache).warmup().fit(verbose)
+                      calibrator=calibrator, cache=cache,
+                      pipeline=pipeline).warmup().fit(verbose)

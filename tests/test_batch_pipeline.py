@@ -1,0 +1,248 @@
+"""`repro.pipeline` contract tests: device order mirror, fused builder,
+async prefetch stream, cursor resume, and the legacy-flag deprecation."""
+import tempfile
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.batching import BatchStream, Cursor, make_policy
+from repro.batching.policy import CommRandPolicy
+from repro.pipeline import (AsyncBatchStream, DeviceBatchBuilder,
+                            order_bitmatch)
+from repro.pipeline.builder import stage_times
+from repro.pipeline.device_order import OrderSpec, device_epoch_order, \
+    epoch_words_for
+from repro.sampling.device import LaborSampler
+
+BATCH = 128
+FANOUTS = (5, 5)
+CAPS = (512, 1024)
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# device order mirror
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,kw", [
+    ("rand", {}), ("norand", {}), ("comm_rand", {"mix": 0.0}),
+    ("comm_rand", {"mix": 0.125}), ("comm_rand", {"mix": 1.0}),
+    ("clustergcn", {}), ("labor", {}),
+])
+def test_device_order_bitmatches_numpy(tiny_graph, name, kw):
+    """The jitted epoch order equals the numpy policy path element for
+    element, across epochs — the contract that lets the fused builder
+    skip the host entirely."""
+    pol = make_policy(name, **kw)
+    assert order_bitmatch(tiny_graph, pol, seed=3, epochs=(0, 1, 2))
+
+
+def test_device_order_is_permutation_and_varies(tiny_graph):
+    spec = OrderSpec.for_policy(tiny_graph, make_policy("comm_rand"))
+    o0 = np.asarray(device_epoch_order(spec, epoch_words_for(0, 0)))
+    o1 = np.asarray(device_epoch_order(spec, epoch_words_for(0, 1)))
+    ref = np.sort(np.asarray(tiny_graph.train_ids))
+    assert np.array_equal(np.sort(o0), ref)
+    assert np.array_equal(np.sort(o1), ref)
+    assert not np.array_equal(o0, o1)        # epochs reshuffle
+
+
+def test_unknown_policy_raises():
+    class Odd:
+        name = "odd"
+        p = 0.5
+
+    with pytest.raises(NotImplementedError):
+        OrderSpec.for_policy(None, Odd())
+
+
+# ---------------------------------------------------------------------------
+# fused builder vs synchronous stream
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pname", ["comm_rand", "labor", "clustergcn"])
+def test_fused_build_bitexact_vs_stream(tiny_graph, pname):
+    """`DeviceBatchBuilder.build(epoch, pos)` returns the same MiniBatch —
+    every leaf bit-equal — as `BatchStream.build` at the same cursor,
+    including the -1-padded final batch."""
+    st = BatchStream(tiny_graph, make_policy(pname), BATCH, FANOUTS, CAPS,
+                     seed=7)
+    bld = DeviceBatchBuilder.from_stream(st)
+    last = bld.num_batches - 1
+    for epoch, pos in [(0, 0), (0, 2), (1, last), (3, 1)]:
+        want = st.build(st.root_batches(epoch)[pos], epoch, pos)
+        got = bld.build(epoch, pos)
+        assert _leaves_equal(want, got), (epoch, pos)
+
+
+def test_builder_rejects_out_of_range(tiny_graph):
+    bld = DeviceBatchBuilder(tiny_graph, make_policy("rand"), BATCH,
+                             FANOUTS, CAPS)
+    with pytest.raises(IndexError):
+        bld.build(0, bld.num_batches)
+
+
+def test_labor_rank_hoist_matches_numpy_mirror(tiny_graph):
+    """The per-epoch device ranks (`epoch_ctx`) and the numpy mirror
+    (`epoch_ranks_np`) are bit-identical — the invariant that keeps
+    `build_batch_np` a valid oracle after the hoist."""
+    from repro.graphs.csr import DeviceGraph
+    s = LaborSampler()
+    g = DeviceGraph.from_graph(tiny_graph)
+    for epoch in (0, 5):
+        key = jax.random.fold_in(jax.random.key(7), epoch)
+        dev = np.asarray(s.epoch_ctx(key, g))
+        host = s.epoch_ranks_np(key, tiny_graph.num_nodes)
+        assert np.array_equal(dev.view(np.uint32), host.view(np.uint32))
+
+
+def test_stage_times_shape(tiny_graph):
+    st = BatchStream(tiny_graph, make_policy("comm_rand"), BATCH, FANOUTS,
+                     CAPS)
+    bd = stage_times(st.g, st.root_batches(0)[0], st.labels, FANOUTS, CAPS,
+                     st.sampler, key=st.batch_key(0, 0),
+                     epoch_key=st.epoch_key(0), iters=2)
+    assert set(bd) == {"roots_us", "sample_us", "dedup_us"}
+    assert all(v > 0 for v in bd.values())
+
+
+# ---------------------------------------------------------------------------
+# async stream: sequence + resume
+# ---------------------------------------------------------------------------
+def test_async_sequence_bitexact_vs_sync(tiny_graph):
+    """Batches delivered by the background prefetcher are bit-equal to
+    the synchronous stream's, in order, across an epoch boundary, and
+    both cursors stay in lockstep."""
+    pol = make_policy("comm_rand")
+    sync = BatchStream(tiny_graph, pol, BATCH, FANOUTS, CAPS, seed=7)
+    asyn = AsyncBatchStream(tiny_graph, pol, BATCH, FANOUTS, CAPS, seed=7)
+    try:
+        nb = sync.num_batches(0)
+        it_s, it_a = iter(sync), iter(asyn)
+        for _ in range(nb + 3):                 # crosses into epoch 1
+            assert _leaves_equal(next(it_s), next(it_a))
+            assert sync.cursor.state() == asyn.cursor.state()
+    finally:
+        asyn.close()
+
+
+def test_async_resume_mid_epoch_bitexact(tiny_graph):
+    """Kill the async stream mid-epoch with depth-2 builds in flight,
+    restore a fresh stream from `Cursor.state()`: the continuation
+    matches an uninterrupted synchronous run batch for batch."""
+    pol = make_policy("comm_rand")
+    sync = BatchStream(tiny_graph, pol, BATCH, FANOUTS, CAPS, seed=7)
+    asyn = AsyncBatchStream(tiny_graph, pol, BATCH, FANOUTS, CAPS, seed=7,
+                            depth=2)
+    it_s, it_a = iter(sync), iter(asyn)
+    for _ in range(4):                          # mid-epoch, queue full
+        next(it_s)
+        next(it_a)
+    saved = asyn.cursor.state()
+    asyn.close()                                # "crash" with work in flight
+
+    resumed = AsyncBatchStream(tiny_graph, pol, BATCH, FANOUTS, CAPS,
+                               seed=7, depth=2)
+    resumed.cursor = Cursor.from_state(saved)
+    try:
+        it_r = iter(resumed)
+        nb = sync.num_batches(0)
+        for _ in range(nb):                     # through the epoch boundary
+            assert _leaves_equal(next(it_s), next(it_r))
+    finally:
+        resumed.close()
+
+
+def test_async_external_cursor_reset_realigns(tiny_graph):
+    """Assigning a new Cursor to a LIVE async stream (the trainer's
+    `_try_resume` path) discards in-flight work and realigns."""
+    pol = make_policy("rand")
+    sync = BatchStream(tiny_graph, pol, BATCH, FANOUTS, CAPS, seed=1)
+    asyn = AsyncBatchStream(tiny_graph, pol, BATCH, FANOUTS, CAPS, seed=1)
+    try:
+        it_a = iter(asyn)
+        for _ in range(3):
+            next(it_a)
+        asyn.cursor = Cursor(2, 5)              # jump while producer runs
+        got = next(iter(asyn))
+        want = sync.build(sync.root_batches(2)[5], 2, 5)
+        assert _leaves_equal(want, got)
+    finally:
+        asyn.close()
+
+
+# ---------------------------------------------------------------------------
+# legacy flag deprecation
+# ---------------------------------------------------------------------------
+def test_prefetch_flag_deprecated_but_compatible(tiny_graph):
+    """`BatchStream(prefetch=...)` warns (it never prefetched — single
+    synchronous dispatch slot) and maps onto `dispatch_ahead`; the new
+    name is silent."""
+    with pytest.warns(DeprecationWarning, match="AsyncBatchStream"):
+        st = BatchStream(tiny_graph, make_policy("rand"), BATCH, FANOUTS,
+                         CAPS, prefetch=False)
+    assert st.dispatch_ahead is False
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        st2 = BatchStream(tiny_graph, make_policy("rand"), BATCH, FANOUTS,
+                          CAPS, dispatch_ahead=True)
+    assert st2.dispatch_ahead is True
+
+
+# ---------------------------------------------------------------------------
+# 20-step loss trajectory: async + resume == sync (comm_rand x LABOR,
+# cache on)
+# ---------------------------------------------------------------------------
+class CommRandLaborPolicy(CommRandPolicy):
+    """comm_rand root ordering trained through the LABOR sampler — the
+    satellite's cross product (structure-aware roots x shared-randomness
+    neighbors)."""
+
+    def sampler_spec(self):
+        return ("labor", {})
+
+
+def _trainer(tiny_graph, tmp=None, pipeline="sync", **kw):
+    from repro.configs.base import GNNConfig, TrainConfig
+    from repro.train.gnn_loop import GNNTrainer
+    cfg = GNNConfig("sage-pipe", "sage", 2, 16, tiny_graph.feat_dim,
+                    tiny_graph.num_classes, fanout=FANOUTS)
+    tcfg = TrainConfig(batch_size=BATCH, max_epochs=2)
+    return GNNTrainer(tiny_graph, cfg, tcfg,
+                      CommRandLaborPolicy("comm_rand", 0.125, 1.0),
+                      caps=CAPS, eval_caps=CAPS, seed=3,
+                      cache="degree_hot", pipeline=pipeline, **kw)
+
+
+def test_async_train_resume_loss_trajectory_bitexact(tiny_graph):
+    """comm_rand roots x LABOR sampler, feature cache on: 20 sync steps
+    vs 8 async steps + mid-epoch crash (depth-2 in flight) + resume from
+    the checkpoint cursor + 12 more — identical loss trajectory, bit for
+    bit, and identical batch key/cursor sequence."""
+    ref = _trainer(tiny_graph, pipeline="sync")
+    ref_losses = ref.train_steps(20)
+
+    with tempfile.TemporaryDirectory() as d:
+        a = _trainer(tiny_graph, tmp=d, pipeline="async", ckpt_dir=d,
+                     ckpt_every=8)
+        assert isinstance(a.stream, AsyncBatchStream)
+        first = a.train_steps(8)                # ckpt fires at step 8
+        cursor_at_kill = a.stream.cursor.state()
+        a.stream.close()                        # crash with work in flight
+        del a
+
+        b = _trainer(tiny_graph, tmp=d, pipeline="async", ckpt_dir=d,
+                     ckpt_every=0)
+        try:
+            assert b.global_step == 8
+            assert b.stream.cursor.state() == cursor_at_kill
+            rest = b.train_steps(12)
+        finally:
+            b.stream.close()
+
+    got = first + rest
+    assert got == ref_losses                    # bit-exact, not allclose

@@ -145,7 +145,7 @@ def test_labor_footprint_below_rand_and_matches_numpy_estimator(tiny_graph):
 
     def device_mean(pol_name, n=5):
         st = BatchStream(tiny_graph, make_policy(pol_name), 256, FANOUTS,
-                         (2048, 2048), seed=0, prefetch=False)
+                         (2048, 2048), seed=0, dispatch_ahead=False)
         sizes = []
         for i, b in enumerate(st.epoch()):
             sizes.append(int(b.num_unique))
