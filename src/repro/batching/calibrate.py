@@ -67,13 +67,20 @@ class CapsCalibrator:
             f"a{self.align}"])
 
     def _load(self) -> dict:
+        """Read the caps cache, treating ANY corruption as a cache miss:
+        a truncated/garbled file (crash mid-write on a non-atomic
+        filesystem, bit rot), valid JSON that isn't a dict, binary
+        garbage (UnicodeDecodeError is a ValueError) — all discard and
+        recalibrate rather than crash. The write side (`_store`) is
+        atomic; the read side has to assume the worst anyway."""
         if not self.cache_path or not os.path.exists(self.cache_path):
             return {}
         try:
             with open(self.cache_path) as f:
-                return json.load(f)
-        except (OSError, json.JSONDecodeError):
+                data = json.load(f)
+        except (OSError, ValueError):
             return {}
+        return data if isinstance(data, dict) else {}
 
     def _store(self, cache: dict) -> None:
         os.makedirs(os.path.dirname(os.path.abspath(self.cache_path)),
@@ -95,7 +102,13 @@ class CapsCalibrator:
         key = self.key(graph, policy, batch_size, fanouts)
         cache = self._load()
         if key in cache:
-            return tuple(int(c) for c in cache[key])
+            try:
+                caps = tuple(int(c) for c in cache[key])
+                if len(caps) == len(tuple(fanouts)) and \
+                        all(c > 0 for c in caps):
+                    return caps
+            except (TypeError, ValueError):
+                pass                   # corrupt entry: fall through, reprobe
         caps = mb.calibrate_caps(
             graph, as_policy(policy), batch_size, tuple(fanouts),
             n_probe=self.n_probe, margin=self.margin, seed=self.seed,

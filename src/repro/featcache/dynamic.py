@@ -66,6 +66,7 @@ import numpy as np
 from repro.featcache.plan import (CachePlan, as_plan, build_plan,
                                   cache_ref_updates_np)
 from repro.kernels.gather_cached.ops import cache_ref_updates
+from repro.resilience import faults
 
 
 @functools.partial(
@@ -262,7 +263,62 @@ def refill(state: DynamicCacheState,
 
     Must be called OUTSIDE differentiated code (the trainer refills
     between batches at epoch boundaries). Oracle: `refill_np`."""
-    return _refill_jit(state, feats)
+    new_state, admitted = _refill_jit(state, feats)
+    spec = faults.fire("cache_corrupt")
+    if spec is not None:
+        # chaos site (repro.resilience): hand back a state whose
+        # residency invariants are violated — the trainer's
+        # `integrity_ok` check at this very boundary must catch it and
+        # degrade to the uncached gather BEFORE any read goes through
+        # the bad position map
+        new_state = _corrupt_state(new_state,
+                                   faults.active().payload_rng(spec))
+    return new_state, admitted
+
+
+def _corrupt_state(state: DynamicCacheState,
+                   rng: np.random.Generator) -> DynamicCacheState:
+    """Deterministic residency scramble (the `cache_corrupt` payload):
+    point one extra node at an already-claimed slot, so the pos->slot
+    map stops being a bijection and `integrity_ok` must fail."""
+    pos = np.asarray(state.pos).copy()
+    res = np.where(pos >= 0)[0]
+    non = np.where(pos < 0)[0]
+    if len(res) and len(non):
+        pos[non[int(rng.integers(len(non)))]] = \
+            pos[res[int(rng.integers(len(res)))]]
+    elif len(res) >= 2:                 # full residency: cross two entries
+        a, b = res[rng.permutation(len(res))[:2]]
+        pos[a] = pos[b]
+    else:
+        return state                    # nothing corruptible (C ~ 0)
+    return replace(state, pos=jnp.asarray(pos))
+
+
+@jax.jit
+def _integrity_jit(state: DynamicCacheState):
+    C = state.capacity
+    slots = jnp.arange(C, dtype=jnp.int32)
+    resident = state.slot_ids >= 0
+    # every resident slot's occupant must map straight back to it ...
+    occ = jnp.clip(state.slot_ids, 0, state.pos.shape[0] - 1)
+    ok = jnp.all(jnp.where(resident, state.pos[occ] == slots, True))
+    # ... and be the ONLY claimant: resident pos entries == resident slots
+    ok &= jnp.sum(state.pos >= 0) == jnp.sum(resident)
+    ok &= jnp.all((state.pos >= -1) & (state.pos < C))
+    ok &= jnp.all((state.refbit == 0) | (state.refbit == 1))
+    return ok
+
+
+def integrity_ok(state: DynamicCacheState) -> bool:
+    """Cheap residency-invariant check (one jitted O(N + C) pass, one
+    bool sync): the slot_ids<->pos maps must be a bijection over the
+    resident rows, pos values in range, reference bits boolean. The
+    trainer runs this at every epoch-boundary refill — the one point
+    residency changes — and degrades to the uncached gather on failure
+    (cache rows are bit-copies, so dropping the cache never perturbs the
+    loss trajectory)."""
+    return bool(_integrity_jit(state))
 
 
 def refill_np(state: Dict[str, np.ndarray],

@@ -42,6 +42,7 @@ from repro.core import minibatch as mb
 from repro.graphs.csr import DeviceGraph, Graph
 from repro.pipeline.device_order import (OrderSpec, device_epoch_order,
                                          epoch_words_for)
+from repro.resilience import faults
 
 
 @functools.partial(jax.jit, static_argnames=("P",))
@@ -167,6 +168,11 @@ class DeviceBatchBuilder:
         if not 0 <= pos < self.num_batches:
             raise IndexError(
                 f"pos {pos} out of range for {self.num_batches} batches")
+        # chaos site (repro.resilience): an armed plan makes this build
+        # raise InjectedFault — in the async pipeline that kills the
+        # producer thread, which the consumer watchdog must absorb by
+        # restarting from the same cursor (bit-exact, builds are pure)
+        faults.maybe_raise("batch_build", epoch=epoch, pos=pos)
         return _fused_build(
             self._seed_key, jnp.asarray(epoch, jnp.int32),
             jnp.asarray(pos, jnp.int32), self.g, self.epoch_roots(epoch),

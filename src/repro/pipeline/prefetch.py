@@ -1,4 +1,4 @@
-"""`AsyncBatchStream`: depth-k background batch prefetching.
+"""`AsyncBatchStream`: depth-k background batch prefetching + watchdog.
 
 A drop-in `BatchStream` whose batches are produced by a background
 producer thread through the fused `DeviceBatchBuilder` (device-resident
@@ -21,15 +21,40 @@ against the synchronous stream — including after an external cursor
 reset (`Cursor.from_state` resume): `_take` detects that the requested
 cursor is not what the producer is about to deliver and restarts the
 producer from the restored cursor, discarding in-flight work.
+
+Watchdog: the producer heartbeats (`_beat`) at every loop turn and while
+blocked on a full queue; the consumer, whenever its queue wait comes up
+empty, checks for a DEAD producer (thread exited — the real exception is
+stashed on `_exc`) or a STALLED one (no heartbeat for `stall_timeout_s`).
+Either way it restarts the producer from the cursor it is waiting on,
+with exponential backoff (`restart_backoff_s * 2^attempt`) and a bounded
+consecutive budget (`max_restarts`); past the budget the REAL producer
+error (with its original traceback) is raised, not a generic wrapper.
+The restart is safe precisely because builds are a pure function of the
+cursor (PR 6): rebuilding (epoch, pos) yields the same batch bit for
+bit, so recovery never perturbs the delivered sequence. Restarts are
+counted on `self.restarts` and, when a `train.monitor.ResilienceMeter`
+is attached (`meter=`), metered as `producer_restarts` events.
+
+Heartbeats pause during a long jitted build (first-call compilation
+included), so `stall_timeout_s` defaults high (60 s); latency-sensitive
+consumers should `prime()` once (compile everything synchronously) and
+then lower the timeout. Fault injection (`repro.resilience`): the
+`producer_hang` site stalls the producer heartbeat-less until a
+generation bump, and `batch_build` faults raised inside
+`DeviceBatchBuilder.build` surface through the dead-producer path —
+both recover through this watchdog.
 """
 from __future__ import annotations
 
 import queue
 import threading
+import time
 
 from repro.batching.stream import BatchStream
 from repro.core import minibatch as mb
 from repro.pipeline.builder import DeviceBatchBuilder
+from repro.resilience import faults
 
 _POLL_S = 0.05          # producer put/consumer get poll for shutdown checks
 
@@ -37,24 +62,36 @@ _POLL_S = 0.05          # producer put/consumer get poll for shutdown checks
 class AsyncBatchStream(BatchStream):
     """`BatchStream` with a depth-k background dispatch queue.
 
-    Same constructor plus `depth` (queue size, default 2). Checkpointing
-    is unchanged: `cursor.state()` / assigning a restored `Cursor` works
-    mid-epoch with builds in flight.
+    Same constructor plus `depth` (queue size, default 2) and the
+    watchdog knobs (`stall_timeout_s`, `max_restarts`,
+    `restart_backoff_s`, `meter`). Checkpointing is unchanged:
+    `cursor.state()` / assigning a restored `Cursor` works mid-epoch
+    with builds in flight.
     """
 
-    def __init__(self, *args, depth: int = 2, **kwargs):
+    def __init__(self, *args, depth: int = 2, stall_timeout_s: float = 60.0,
+                 max_restarts: int = 3, restart_backoff_s: float = 0.05,
+                 meter=None, **kwargs):
         # the base class's single-slot dispatch is superseded by the queue
         kwargs.setdefault("dispatch_ahead", False)
         super().__init__(*args, **kwargs)
         if depth < 1:
             raise ValueError(f"depth must be >= 1, got {depth}")
         self.depth = depth
+        self.stall_timeout_s = stall_timeout_s
+        self.max_restarts = max_restarts
+        self.restart_backoff_s = restart_backoff_s
+        self.meter = meter          # optional ResilienceMeter
+        self.restarts = 0           # lifetime watchdog restarts
         self.builder = DeviceBatchBuilder.from_stream(self)
         self._queue = None          # queue.Queue of (epoch, pos, batch)
         self._thread = None
         self._gen = 0               # bumped on restart; stale producers exit
         self._stop = threading.Event()
         self._next_out = None       # (epoch, pos) at the queue's head
+        self._beat = None           # monotonic time of last producer beat
+        self._exc = None            # stashed REAL producer exception
+        self._consec_restarts = 0   # watchdog budget, reset on delivery
 
     # -- producer -----------------------------------------------------------
     def _advance(self, epoch: int, pos: int):
@@ -66,10 +103,19 @@ class AsyncBatchStream(BatchStream):
     def _produce(self, epoch: int, pos: int, gen: int, q) -> None:
         try:
             while not self._stop.is_set() and gen == self._gen:
+                self._beat = time.monotonic()
                 if self.num_batches(epoch) == 0:
                     return          # consumer raises; nothing to build
+                if faults.fire("producer_hang", epoch=epoch,
+                               pos=pos) is not None:
+                    # chaos site: stop heartbeating and producing until a
+                    # generation bump (watchdog restart or close) ends us
+                    while gen == self._gen and not self._stop.is_set():
+                        time.sleep(_POLL_S)
+                    return
                 batch = self.builder.build(epoch, pos)
                 while gen == self._gen and not self._stop.is_set():
+                    self._beat = time.monotonic()   # full queue is healthy
                     try:
                         q.put((epoch, pos, batch), timeout=_POLL_S)
                         break
@@ -77,6 +123,11 @@ class AsyncBatchStream(BatchStream):
                         continue
                 epoch, pos = self._advance(epoch, pos)
         except BaseException as exc:    # surface build errors to consumer
+            # stash the real exception (with traceback) BEFORE attempting
+            # the queue handoff: if the error q.put times out on a full
+            # queue, _take still re-raises the true error instead of a
+            # generic "producer died" RuntimeError
+            self._exc = exc
             try:
                 q.put(("error", exc, None), timeout=1.0)
             except queue.Full:
@@ -86,35 +137,82 @@ class AsyncBatchStream(BatchStream):
         self._gen += 1              # in-flight producer drains out and exits
         self._queue = queue.Queue(maxsize=self.depth)
         self._next_out = (epoch, pos)
+        self._beat = time.monotonic()   # fresh grace period
         self._thread = threading.Thread(
             target=self._produce, args=(epoch, pos, self._gen, self._queue),
             name=f"AsyncBatchStream-{id(self):x}", daemon=True)
         self._thread.start()
 
-    # -- consumer -----------------------------------------------------------
+    # -- consumer + watchdog ------------------------------------------------
+    def _stalled(self) -> bool:
+        return (self.stall_timeout_s is not None and self._beat is not None
+                and time.monotonic() - self._beat > self.stall_timeout_s)
+
+    def _recover(self, epoch: int, pos: int, reason: BaseException) -> None:
+        """Watchdog action: restart the producer from the cursor we are
+        waiting on — bit-exact, since builds are pure in (epoch, pos) —
+        with exponential backoff and a bounded consecutive budget. Past
+        the budget, raise the stashed real producer error (original
+        traceback) or the stall diagnosis."""
+        if self._consec_restarts >= self.max_restarts:
+            err = self._exc if self._exc is not None else reason
+            self.close()
+            raise err
+        self._consec_restarts += 1
+        self.restarts += 1
+        if self.meter is not None:
+            self.meter.note("producer_restarts", epoch=epoch, pos=pos,
+                            reason=repr(reason))
+        time.sleep(self.restart_backoff_s
+                   * (2 ** (self._consec_restarts - 1)))
+        self._exc = None
+        self._restart(epoch, pos)
+
     def _take(self, epoch: int, pos: int) -> mb.MiniBatch:
-        if self._thread is None or not self._thread.is_alive() \
-                or self._next_out != (epoch, pos):
+        if self._thread is None or self._next_out != (epoch, pos):
             # first use, or an external cursor reset (checkpoint resume):
-            # drop in-flight work and realign the producer
+            # drop in-flight work and realign the producer. A DEAD but
+            # still-aligned producer is deliberately NOT handled here —
+            # it falls through to the loop below so the restart goes
+            # through `_recover` (metered, backed off, budgeted).
             self._restart(epoch, pos)
-        q = self._queue
         while True:
+            q = self._queue
             try:
                 item = q.get(timeout=_POLL_S)
             except queue.Empty:
                 if self._thread is None or not self._thread.is_alive():
-                    raise RuntimeError(
-                        "AsyncBatchStream producer died without output")
+                    self._recover(epoch, pos, self._exc or RuntimeError(
+                        "AsyncBatchStream producer died without output"))
+                elif self._stalled():
+                    self._recover(epoch, pos, RuntimeError(
+                        f"AsyncBatchStream producer heartbeat stalled "
+                        f"> {self.stall_timeout_s}s at {(epoch, pos)}"))
                 continue
             if item[0] == "error":
-                self.close()
-                raise item[1]
+                self._recover(epoch, pos, item[1])
+                continue
             e, p, batch = item
             if (e, p) != (epoch, pos):      # stale pre-restart leftover
                 continue
+            self._consec_restarts = 0       # healthy delivery resets budget
             self._next_out = self._advance(epoch, pos)
             return batch
+
+    def prime(self) -> "AsyncBatchStream":
+        """Compile the fused build path synchronously (one throwaway
+        build of the cursor batch). Heartbeats pause during jit
+        compilation, so latency-sensitive consumers prime once BEFORE
+        tightening `stall_timeout_s` — otherwise the watchdog can
+        mistake first-call compilation for a hang."""
+        c = self.cursor
+        if self.num_batches(c.epoch) > 0:
+            import jax
+            jax.block_until_ready(
+                self.builder.build(c.epoch,
+                                   min(c.pos,
+                                       self.num_batches(c.epoch) - 1)))
+        return self
 
     def _dispatch_ahead(self, epoch: int, pos: int) -> None:
         pass                        # the queue IS the lookahead
@@ -134,6 +232,7 @@ class AsyncBatchStream(BatchStream):
                 t.join(timeout=_POLL_S)
         self._queue = None
         self._next_out = None
+        self._beat = None
         self._stop = threading.Event()   # close() then reuse => restart
 
     def __del__(self):

@@ -1,0 +1,43 @@
+"""`repro.resilience` — deterministic fault injection + guarded execution.
+
+A long training run dies in boring ways: a corrupt checkpoint, a hung
+producer thread, a NaN loss, a scribbled-over cache. This subsystem makes
+each of those a *replayable* scenario and gives every layer of the GNN
+stack a bounded recovery path:
+
+  faults    seeded `FaultPlan` arming five named sites (`batch_build`,
+            `producer_hang`, `step_nonfinite`, `ckpt_truncate`,
+            `cache_corrupt`) wired into `pipeline.builder`,
+            `pipeline.prefetch`, `train.checkpoint`, `featcache.dynamic`
+            and the GNN train step — every chaos run replays exactly
+  guard     `GuardConfig` for the guarded train step: in-jit non-finite
+            detection + skip (no host sync), a consecutive-skip budget,
+            rollback-to-checkpoint escalation, all metered by
+            `train.monitor.ResilienceMeter`
+  soak      the chaos harness: inject one fault from each class into a
+            comm_rand x LABOR + dynamic-cache run and assert the
+            recovered loss trajectory is BIT-IDENTICAL to the fault-free
+            run (`benchmarks/chaos_soak.py` gates this in CI)
+
+Recovery guarantees (all bit-exact because batches, dropout keys and
+cache state are pure functions of the checkpointed cursor):
+`AsyncBatchStream` restarts a dead/hung producer from the current cursor
+(exponential backoff, bounded budget); `restore_latest` falls back past
+corrupt checkpoints to the newest valid one; a non-finite step applies
+no update and escalates to rollback after the skip budget; a cache
+failing its residency integrity check is dropped for the uncached gather
+(cache rows are bit-copies, so the loss trajectory is unaffected).
+
+`repro.resilience.soak` is imported lazily (it pulls in the trainer).
+"""
+from repro.resilience.faults import (FAULT_SITES, FaultPlan,  # noqa: F401
+                                     FaultSpec, InjectedFault, active,
+                                     corrupt_checkpoint, corrupt_file,
+                                     fire, inject, install, maybe_raise)
+from repro.resilience.guard import GuardConfig, as_guard      # noqa: F401
+
+__all__ = [
+    "FAULT_SITES", "FaultPlan", "FaultSpec", "GuardConfig",
+    "InjectedFault", "active", "as_guard", "corrupt_checkpoint",
+    "corrupt_file", "fire", "inject", "install", "maybe_raise",
+]

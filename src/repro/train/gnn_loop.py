@@ -28,6 +28,24 @@ The evolving state is checkpointed alongside the weights (plus the
 boundary bookkeeping in `extra`), so interrupted dynamic-cache runs
 resume with a bit-identical loss trajectory AND cache state. Evaluation
 reads through the cache but never feeds the counters.
+
+Guarded execution (`repro.resilience`): the jitted train step checks the
+loss and every grad leaf for finiteness ON DEVICE and applies no update
+on a non-finite step (a `jnp.where` select — no extra host sync; with
+`poison=1.0` the guard is a bit-exact no-op). A device-resident
+consecutive-skip counter rides through the step; with
+`GNNTrainer(guard=GuardConfig(...))` the trainer syncs it every
+`check_every` steps (and always at flush/checkpoint boundaries), and
+past `max_consecutive_skips` escalates: `resilient_step` restores the
+newest VALID checkpoint (`restore_latest` falls back across corrupt
+ones) and replays — bit-exact, because batches, dropout keys and cache
+state are pure functions of the checkpointed cursor. Skips, rollbacks
+and checkpoint fallbacks are metered in a
+`train.monitor.ResilienceMeter`. The dynamic cache additionally passes a
+residency integrity check at every refill; on failure the trainer drops
+to the uncached gather and keeps training (cache rows are bit-copies, so
+the loss trajectory is unaffected), surfacing the event through the
+`HitRateMeter` trajectory and the resilience meter.
 """
 from __future__ import annotations
 
@@ -52,9 +70,12 @@ from repro.kernels.gather_cached.ops import cache_stats
 from repro.models.gnn.models import apply_gnn, init_gnn
 from repro.optim import adamw
 from repro.optim.schedule import EarlyStopping, ReduceLROnPlateau
+from repro.resilience import faults
+from repro.resilience.guard import as_guard
 from repro.train import checkpoint as ckpt
 from repro.train.losses import accuracy, gnn_softmax_ce
-from repro.train.monitor import HitRateMeter
+from repro.train.monitor import (HitRateMeter, ResilienceMeter, StepFailure,
+                                 resilient_step)
 
 
 @dataclass
@@ -97,7 +118,7 @@ def _batch_cache_stats(cache, batch: mb.MiniBatch):
 def _make_steps(cfg: GNNConfig, tcfg: TrainConfig):
     @functools.partial(jax.jit, static_argnames=())
     def train_step(params, opt_state, batch: mb.MiniBatch, feats, degrees,
-                   lr, key, cache):
+                   lr, key, cache, poison, skips):
         def loss_fn(p):
             # no (cap_L, F) pre-gather: layer 0 reads feature rows straight
             # from the global matrix through the fused gather-agg path —
@@ -105,20 +126,41 @@ def _make_steps(cfg: GNNConfig, tcfg: TrainConfig):
             logits = apply_gnn(cfg, p, batch, feats, degrees, train=True,
                                dropout_key=key, feats_global=True,
                                cache=cache)
+            # `poison` is 1.0 in normal runs (multiplying by 1.0 is a
+            # bitwise no-op in IEEE) and NaN when the `step_nonfinite`
+            # chaos site is armed: loss AND every grad go non-finite, so
+            # the guard below must catch it
             return gnn_softmax_ce(logits, batch.labels,
-                                  batch.label_mask.astype(jnp.float32))
+                                  batch.label_mask.astype(jnp.float32)) \
+                * poison
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
+        # guarded execution, folded into the step (zero extra host syncs):
+        # a non-finite loss or any non-finite grad leaf means this batch
+        # applies NO update — params/opt are kept via a where-select and
+        # the device-resident consecutive-skip counter increments
+        ok = jnp.isfinite(loss)
+        for g in jax.tree.leaves(grads):
+            ok = jnp.logical_and(ok, jnp.all(jnp.isfinite(g)))
         new_params, new_opt = adamw.update(
             grads, opt_state, params, lr=lr,
             weight_decay=tcfg.weight_decay)
+
+        def keep(new, old):
+            return jax.tree.map(lambda n, o: jnp.where(ok, n, o), new, old)
+
+        new_params, new_opt = keep(new_params, params), \
+            keep(new_opt, opt_state)
+        skips = jnp.where(ok, jnp.int32(0), skips + jnp.int32(1))
         hits, misses = _batch_cache_stats(cache, batch)
         # dynamic CLOCK admission: fold this batch's reads into the
         # reference bits / candidate frequencies ON DEVICE; only the three
-        # accumulator arrays come back (the (C, F) rows are never copied)
+        # accumulator arrays come back (the (C, F) rows are never copied).
+        # NOT gated on `ok`: a skipped batch still touched its rows, and
+        # replayed reads after a rollback refold identically anyway.
         refs = (featcache_dynamic.ref_updates(cache, batch.node_ids)
                 if isinstance(cache, DynamicCacheState) else None)
-        return new_params, new_opt, loss, hits, misses, refs
+        return new_params, new_opt, loss, ok, skips, hits, misses, refs
 
     @jax.jit
     def eval_step(params, batch: mb.MiniBatch, feats, degrees, cache):
@@ -139,7 +181,8 @@ class GNNTrainer:
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0,
                  calibrator: Optional[CapsCalibrator] = None,
                  cache=None, cache_capacity: Optional[int] = None,
-                 cache_frac: float = 0.2, pipeline: str = "sync"):
+                 cache_frac: float = 0.2, pipeline: str = "sync",
+                 guard=None):
         self.graph = graph
         self.cfg = cfg
         self.tcfg = tcfg
@@ -178,6 +221,14 @@ class GNNTrainer:
             fanouts=self.fanouts, seed=seed)
         self.cache_meter = HitRateMeter()
         self._pending_stats = []      # device counters, synced per epoch
+        # guarded execution (repro.resilience): None/False disables (the
+        # in-jit guard still runs but is never synced or escalated),
+        # True = GuardConfig() defaults, or an explicit GuardConfig
+        self.guard = as_guard(guard)
+        self.guard_meter = ResilienceMeter()
+        self._skips = jnp.zeros((), jnp.int32)   # device skip counter
+        self._skips_host = 0          # last synced value (guard checks)
+        self._pending_ok = []         # (ok, step) device flags, per flush
         # pipeline="sync" is the classic BatchStream (host epoch order +
         # single-slot async dispatch); "async" swaps in the depth-2
         # background prefetcher over the fused on-device builder
@@ -185,16 +236,19 @@ class GNNTrainer:
         if pipeline not in ("sync", "async"):
             raise ValueError(
                 f"pipeline must be 'sync' or 'async', got {pipeline!r}")
+        stream_kwargs = {}
         if pipeline == "async":
             from repro.pipeline import AsyncBatchStream
             stream_cls = AsyncBatchStream
+            # watchdog restarts surface in THIS trainer's resilience meter
+            stream_kwargs["meter"] = self.guard_meter
         else:
             stream_cls = BatchStream
         self.pipeline = pipeline
         self.stream = stream_cls(
             graph, self.policy, tcfg.batch_size, self.fanouts, self.caps,
             seed=seed, device_graph=self.g, labels=self.labels,
-            cache=self.cache)
+            cache=self.cache, **stream_kwargs)
         # epoch whose boundary refill is still pending (dynamic cache);
         # travels in checkpoint `extra` so resume never double-refills
         self._cache_epoch = self.stream.cursor.epoch
@@ -223,10 +277,15 @@ class GNNTrainer:
                          "fit": self._fit_state,
                          "cache_epoch": self._cache_epoch})
 
-    def _try_resume(self) -> None:
-        step, tree, extra = ckpt.restore_latest(self.ckpt_dir, self._state())
-        if step is None:
-            return
+    def _on_corrupt_ckpt(self, step: int, err: Exception) -> None:
+        """`restore_latest` fallback hook: meter each corrupt/partial
+        checkpoint skipped on the way to the newest valid one."""
+        self.guard_meter.note("ckpt_fallbacks", ckpt_step=step,
+                              error=str(err))
+
+    def _apply_restored(self, step: int, tree, extra) -> None:
+        """Install a restored checkpoint as the live training state
+        (shared by startup resume and guard rollback)."""
         self.params, self.opt_state = tree["params"], tree["opt"]
         self._best_params = tree["best"]
         self.global_step = step
@@ -236,6 +295,13 @@ class GNNTrainer:
             self._set_cache(tree["cache"])
         self._cache_epoch = int(extra.get("cache_epoch",
                                           self.stream.cursor.epoch))
+
+    def _try_resume(self) -> None:
+        step, tree, extra = ckpt.restore_latest(
+            self.ckpt_dir, self._state(), on_corrupt=self._on_corrupt_ckpt)
+        if step is None:
+            return
+        self._apply_restored(step, tree, extra)
 
     # -- batch building -----------------------------------------------------
     def _dropout_key(self):
@@ -258,7 +324,8 @@ class GNNTrainer:
                            self.fanouts, self.caps, self.sampler)
         self.params, self.opt_state, *_ = self.train_step(
             self.params, self.opt_state, b, self.feats, self.degrees,
-            0.0, jax.random.key(0), self.cache)
+            0.0, jax.random.key(0), self.cache, 1.0,
+            jnp.zeros((), jnp.int32))
         be = mb.build_batch(jax.random.key(0), self.g,
                             jnp.asarray(roots, jnp.int32), self.labels,
                             self.fanouts, self.eval_caps,
@@ -275,23 +342,37 @@ class GNNTrainer:
         self.stream.cache = cache
 
     def _train_one(self, batch: mb.MiniBatch, lr: float):
-        self.params, self.opt_state, loss, hits, misses, refs = \
-            self.train_step(
+        poison = 1.0
+        if faults.fire("step_nonfinite", step=self.global_step) is not None:
+            # chaos site: NaN the loss inside the jitted step — python
+            # floats are weak-typed scalars, so 1.0 vs nan never retraces
+            poison = float("nan")
+        self.params, self.opt_state, loss, ok, self._skips, hits, misses, \
+            refs = self.train_step(
                 self.params, self.opt_state, batch, self.feats,
-                self.degrees, lr, self._dropout_key(), self.cache)
+                self.degrees, lr, self._dropout_key(), self.cache,
+                poison, self._skips)
         if self.cache is not None:
             # keep the device counters un-synced: a float()/int() here
             # would serialize away the stream's prefetch overlap
             self._pending_stats.append((hits, misses))
+        if self.guard is not None:
+            self._pending_ok.append((ok, self.global_step))
         if refs is not None:
             self._set_cache(featcache_dynamic.with_refs(self.cache, refs))
         self.global_step += 1
+        # a checkpoint due at this step forces a guard sync first: we must
+        # NEVER checkpoint mid-skip-burst, or a later rollback to that
+        # checkpoint would permanently lose the skipped batches (the
+        # replayed trajectory could not bit-match a clean run)
+        due_ckpt = bool(self.ckpt_dir and self.ckpt_every and
+                        self.global_step % self.ckpt_every == 0)
+        rolled = self._guard_check(force=due_ckpt)
         # refill BEFORE any checkpoint at this step: a boundary checkpoint
         # then carries the post-refill state + advanced _cache_epoch, so a
         # resumed run neither skips nor repeats the refill
         self._maybe_refill()
-        if self.ckpt_dir and self.ckpt_every and \
-                self.global_step % self.ckpt_every == 0:
+        if due_ckpt and not rolled and self._skips_host == 0:
             self.save()
         return loss
 
@@ -311,15 +392,91 @@ class GNNTrainer:
                 (c.epoch == self._cache_epoch and at_end)):
             return
         state, admitted = featcache_dynamic.refill(self.cache, self.feats)
+        if not featcache_dynamic.integrity_ok(state):
+            # graceful degradation: residency invariants broken (the
+            # cache_corrupt chaos site, or a real bug) — drop to the
+            # uncached feats_global gather rather than serve rows through
+            # a corrupt pos map. Detected HERE, at the refill boundary
+            # BEFORE any read goes through the new state, so every loss
+            # ever computed came from intact bit-copies of the global
+            # rows and the trajectory stays bit-identical to an
+            # uncorrupted run.
+            self.guard_meter.note("cache_degradations",
+                                  step=self.global_step, epoch=c.epoch)
+            self.cache_meter.note_degraded(self.global_step)
+            self._pending_stats = []    # counters of the dropped state
+            self._set_cache(None)
+            return
         self._set_cache(state)
         self.cache_meter.observe_refill(admitted)
         self._cache_epoch = c.epoch + 1 if at_end else c.epoch
 
     def _flush_cache_stats(self) -> None:
-        """Sync pending per-batch counters into the hit-rate meter."""
+        """Sync pending per-batch device flags: cache counters into the
+        hit-rate meter, guard ok flags into the resilience meter."""
         for h, m in self._pending_stats:
             self.cache_meter.observe(h, m)
         self._pending_stats = []
+        for ok, step in self._pending_ok:
+            if not bool(ok):
+                self.guard_meter.note("skipped_steps", step=step)
+        self._pending_ok = []
+
+    # -- guarded execution (repro.resilience) -------------------------------
+    def _guard_check(self, force: bool = False) -> bool:
+        """Sync the device skip counter when due (`check_every` cadence,
+        or forced at flush/checkpoint boundaries) and escalate past the
+        consecutive-skip budget. Returns True if it rolled back."""
+        g = self.guard
+        if g is None:
+            return False
+        if not (force or (g.check_every > 0 and
+                          self.global_step % g.check_every == 0)):
+            return False
+        self._skips_host = int(self._skips)     # the one guard sync
+        if self._skips_host <= g.max_consecutive_skips:
+            return False
+        self._escalate()
+        return True
+
+    def _escalate(self) -> None:
+        """Consecutive-skip budget blown: roll back to the newest VALID
+        checkpoint and replay. Replay is clean for transient causes
+        (an armed fault window is behind the invocation counter by the
+        time the replayed steps re-fire) and bit-exact because batches,
+        dropout keys and cache state are pure functions of the restored
+        cursor. Persistent causes re-escalate until `max_rollbacks`,
+        then raise StepFailure."""
+        self._flush_cache_stats()       # meter the skips we're erasing
+        self.guard_meter.note("rollbacks", step=self.global_step,
+                              skips=self._skips_host)
+        if self.guard_meter.rollbacks > self.guard.max_rollbacks:
+            raise StepFailure(
+                f"non-finite steps persisted through "
+                f"{self.guard.max_rollbacks} rollbacks "
+                f"(step {self.global_step})")
+        if not self.ckpt_dir:
+            raise StepFailure(
+                f"{self._skips_host} consecutive non-finite steps at step "
+                f"{self.global_step} and no ckpt_dir to roll back to")
+
+        def _restore():
+            step, tree, extra = ckpt.restore_latest(
+                self.ckpt_dir, self._state(),
+                on_corrupt=self._on_corrupt_ckpt)
+            if step is None:
+                raise StepFailure(
+                    f"rollback found no valid checkpoint in "
+                    f"{self.ckpt_dir}")
+            return step, tree, extra
+
+        (step, tree, extra), _ = resilient_step(
+            _restore, max_retries=1, backoff_s=0.05)
+        self._apply_restored(step, tree, extra)
+        self._skips = jnp.zeros((), jnp.int32)
+        self._skips_host = 0
+        self._pending_stats = []
+        self._pending_ok = []
 
     def run_epoch(self, lr: float) -> Dict:
         """Consume the remainder of the stream's current epoch (the
@@ -335,6 +492,7 @@ class GNNTrainer:
             jax.block_until_ready(losses[-1])
         dt = time.perf_counter() - t0
         self._flush_cache_stats()
+        self._guard_check(force=True)   # epoch boundary: exact skip state
         if not losses:          # resumed exactly on an epoch boundary
             return {"loss": 0.0, "time": dt, "uniq": 0.0,
                     "cache_hit": 0.0, "cache_refill": 0}
@@ -354,6 +512,7 @@ class GNNTrainer:
         # sync every batch and serialize away the stream's prefetch overlap
         losses = [self._train_one(next(it), lr) for _ in range(n)]
         self._flush_cache_stats()
+        self._guard_check(force=True)
         return [float(l) for l in losses]
 
     def evaluate(self, ids: np.ndarray) -> Dict:
@@ -453,8 +612,9 @@ def train_once(graph: Graph, cfg: GNNConfig, policy,
                tcfg: Optional[TrainConfig] = None, seed: int = 0,
                verbose: bool = False,
                calibrator: Optional[CapsCalibrator] = None,
-               cache=None, pipeline: str = "sync") -> TrainResult:
+               cache=None, pipeline: str = "sync",
+               guard=None) -> TrainResult:
     tcfg = tcfg or TrainConfig()
     return GNNTrainer(graph, cfg, tcfg, policy, seed=seed,
                       calibrator=calibrator, cache=cache,
-                      pipeline=pipeline).warmup().fit(verbose)
+                      pipeline=pipeline, guard=guard).warmup().fit(verbose)

@@ -8,7 +8,11 @@ failures (tested by fault injection in tests/test_fault_tolerance.py).
 `HitRateMeter` accumulates the feature-cache hit/miss counters the GNN
 trainer measures per batch (`repro.featcache`) into per-epoch hit rates,
 plus — for dynamic CLOCK admission — the per-epoch refill churn and the
-hit-rate trajectory across epochs.
+hit-rate trajectory across epochs. `ResilienceMeter` counts the recovery
+actions the guarded GNN path takes (skipped non-finite steps, rollbacks,
+producer watchdog restarts, corrupt-checkpoint fallbacks, cache
+degradations) so chaos runs (`repro.resilience`) can assert that the
+expected recovery — and ONLY the expected recovery — happened.
 """
 from __future__ import annotations
 
@@ -61,6 +65,7 @@ class HitRateMeter:
     hits: int = 0
     misses: int = 0
     refills: int = 0                  # admitted rows, all epochs (churn)
+    degraded_at: Optional[int] = None  # step the cache was dropped, if any
     trajectory: List[dict] = field(default_factory=list)
 
     def observe(self, hits, misses) -> None:
@@ -70,6 +75,13 @@ class HitRateMeter:
     def observe_refill(self, admitted) -> None:
         """Count one epoch boundary's refill churn (admitted rows)."""
         self.refills += int(admitted)
+
+    def note_degraded(self, step: int) -> None:
+        """Record that the trainer dropped a corrupt cache and fell back
+        to the uncached gather (graceful degradation — the trajectory
+        keeps a visible marker, hit counting simply stops)."""
+        self.degraded_at = step
+        self.trajectory.append({"degraded": True, "step": step})
 
     @property
     def total(self) -> int:
@@ -95,6 +107,35 @@ class HitRateMeter:
                                             else 0)}
         self.trajectory.append(entry)
         return entry
+
+
+@dataclass
+class ResilienceMeter:
+    """Recovery-action counters for the guarded GNN path.
+
+    Each `note(kind, **info)` bumps the matching counter and appends the
+    event (with its context) to `events`, so tests can assert both the
+    count and the shape of every recovery a chaos run took."""
+    skipped_steps: int = 0            # non-finite steps whose update was
+    #                                   dropped by the in-jit select
+    rollbacks: int = 0                # skip budget exceeded -> restore
+    producer_restarts: int = 0        # AsyncBatchStream watchdog kicks
+    ckpt_fallbacks: int = 0           # corrupt checkpoints skipped over
+    cache_degradations: int = 0       # dynamic cache dropped to uncached
+    events: List[dict] = field(default_factory=list)
+
+    _KINDS = ("skipped_steps", "rollbacks", "producer_restarts",
+              "ckpt_fallbacks", "cache_degradations")
+
+    def note(self, kind: str, **info) -> None:
+        if kind not in self._KINDS:
+            raise ValueError(f"unknown resilience event {kind!r}; "
+                             f"known: {self._KINDS}")
+        setattr(self, kind, getattr(self, kind) + 1)
+        self.events.append({"kind": kind, **info})
+
+    def counts(self) -> dict:
+        return {k: getattr(self, k) for k in self._KINDS}
 
 
 class StepFailure(RuntimeError):

@@ -167,3 +167,61 @@ def test_elastic_reshard_subprocess():
     out = subprocess.run([sys.executable, "-c", ELASTIC_SCRIPT], env=env,
                          capture_output=True, text=True, timeout=300)
     assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# property-based checkpoint corruption (repro.resilience payloads)
+# ---------------------------------------------------------------------------
+def _ckpt_tree(s):
+    return {"w": jnp.arange(24.0).reshape(4, 6) * (s + 1),
+            "c": jnp.full((7,), s, jnp.int32)}
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_corrupt=st.integers(0, 2),
+       mode=st.sampled_from(["truncate", "flip"]),
+       seed=st.integers(0, 10 ** 6))
+def test_restore_latest_lands_on_newest_valid(n_corrupt, mode, seed):
+    """Property: damage the newest `n_corrupt` of 3 checkpoints with a
+    random payload (truncate a random file to a prefix, or flip one byte
+    of the manifest or a leaf) — `restore_latest` lands on the newest
+    UNCORRUPTED step with every leaf value intact, and reports exactly
+    the skipped steps to `on_corrupt`."""
+    from repro.resilience import corrupt_checkpoint
+
+    rng = np.random.default_rng(seed)
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3):
+            ckpt.save(d, s, _ckpt_tree(s), extra={"s": s}, keep=3)
+        for s in (3, 2)[:n_corrupt]:
+            corrupt_checkpoint(os.path.join(d, f"step_{s:09d}"), rng,
+                               mode=mode)
+        skipped = []
+        step, tree, extra = ckpt.restore_latest(
+            d, _ckpt_tree(0), on_corrupt=lambda s, e: skipped.append(s))
+        want = 3 - n_corrupt
+        assert step == want and extra["s"] == want
+        assert skipped == list(range(3, want, -1))
+        for a, b in zip(jax.tree.leaves(_ckpt_tree(want)),
+                        jax.tree.leaves(tree)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=6, deadline=None)
+@given(target=st.sampled_from(["manifest.json", "leaf_0.npy",
+                               "leaf_1.npy"]),
+       mode=st.sampled_from(["truncate", "flip"]),
+       seed=st.integers(0, 10 ** 6))
+def test_any_single_file_corruption_is_detected(target, mode, seed):
+    """Property: damaging ANY one checkpoint file — manifest or either
+    leaf, torn or bit-rotted — makes `restore` raise CheckpointCorrupt
+    rather than return silently wrong state."""
+    from repro.resilience import corrupt_checkpoint
+
+    rng = np.random.default_rng(seed)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 5, _ckpt_tree(2), extra={"s": 2})
+        corrupt_checkpoint(os.path.join(d, "step_000000005"), rng,
+                           mode=mode, target=target)
+        with pytest.raises(ckpt.CheckpointCorrupt):
+            ckpt.restore(d, 5, _ckpt_tree(0))

@@ -1,0 +1,347 @@
+"""`repro.resilience` contract tests: deterministic fault plans, the
+guarded GNN train step (skip / rollback), the async producer watchdog,
+checkpoint integrity + fallback, caps-cache robustness, dynamic-cache
+integrity degradation — and the headline chaos soak: one fault of every
+class, each recovering onto a BIT-IDENTICAL loss trajectory."""
+import json
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import featcache
+from repro.batching import BatchStream, CapsCalibrator, make_policy
+from repro.featcache import dynamic as fdyn
+from repro.pipeline import AsyncBatchStream
+from repro.resilience import (FaultPlan, FaultSpec, GuardConfig,
+                              InjectedFault, as_guard, corrupt_checkpoint,
+                              faults, soak)
+from repro.train import checkpoint as ckpt
+from repro.train.monitor import ResilienceMeter, StepFailure
+
+BATCH, FANOUTS, CAPS = soak.BATCH, soak.FANOUTS, soak.CAPS
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+def test_fault_plan_seeded_is_deterministic():
+    windows = {"batch_build": (3, 9), "step_nonfinite": (0, 50)}
+    p1 = FaultPlan.seeded(7, windows, {"step_nonfinite": 3})
+    p2 = FaultPlan.seeded(7, windows, {"step_nonfinite": 3})
+    assert p1.specs == p2.specs
+    assert {s.site for s in p1.specs} == set(windows)
+    for s in p1.specs:
+        lo, hi = windows[s.site]
+        assert lo <= s.start <= hi
+    # the payload stream replays too: same (seed, site, start) -> same draws
+    s = p1.specs[0]
+    assert p1.payload_rng(s).integers(1 << 30) == \
+        p2.payload_rng(s).integers(1 << 30)
+
+
+def test_fault_plan_fire_window_and_events():
+    plan = FaultPlan(specs=(FaultSpec("batch_build", 2, 2),))
+    armed = [plan.fire("batch_build", pos=i) is not None for i in range(6)]
+    assert armed == [False, False, True, True, False, False]
+    assert [e["invocation"] for e in plan.fired("batch_build")] == [2, 3]
+    assert plan.fired("ckpt_truncate") == []
+    assert plan.counters["batch_build"] == 6
+
+
+def test_inject_context_installs_and_restores():
+    assert faults.active() is None
+    plan = FaultPlan(specs=(FaultSpec("batch_build", 0),))
+    with faults.inject(plan) as p:
+        assert faults.active() is p
+        with pytest.raises(InjectedFault):
+            faults.maybe_raise("batch_build")
+        faults.maybe_raise("batch_build")       # invocation 1: disarmed
+    assert faults.active() is None
+    faults.maybe_raise("batch_build")           # no plan: free no-op
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec("no_such_site", 0)
+    with pytest.raises(ValueError):
+        FaultSpec("batch_build", -1)
+    with pytest.raises(ValueError):
+        FaultSpec("batch_build", 0, 0)
+    with pytest.raises(ValueError):
+        ResilienceMeter().note("no_such_kind")
+
+
+def test_as_guard_normalization():
+    assert as_guard(None) is None
+    assert as_guard(False) is None
+    assert as_guard(True) == GuardConfig()
+    g = GuardConfig(max_consecutive_skips=1, check_every=2)
+    assert as_guard(g) is g
+    with pytest.raises(TypeError):
+        as_guard("yes")
+    with pytest.raises(ValueError):
+        GuardConfig(max_consecutive_skips=-1)
+
+
+# ---------------------------------------------------------------------------
+# guarded train step: in-jit skip (no rollback)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("guard", [soak.GUARD, None])
+def test_nonfinite_step_applies_no_update(tiny_graph, guard):
+    """One poisoned step below the skip budget: the where-select keeps
+    params/opt bit-identical (guard=None included — detection lives in
+    the jitted step; the config only controls sync/escalation), and the
+    next clean step trains normally from the untouched weights."""
+    tr = soak.make_trainer(tiny_graph, pipeline="sync", ckpt_dir=None,
+                           ckpt_every=0, guard=guard)
+    tr.train_steps(1)                           # compile + one clean step
+    before = jax.tree.map(lambda x: np.asarray(x), tr.params)
+    plan = FaultPlan(specs=(FaultSpec("step_nonfinite", 0),))
+    with faults.inject(plan):
+        (bad,) = tr.train_steps(1)              # invocation 0: poisoned
+        mid = jax.tree.map(lambda x: np.asarray(x), tr.params)
+        (good,) = tr.train_steps(1)
+    assert plan.fired("step_nonfinite")
+    assert np.isnan(bad) and np.isfinite(good)
+    after_skip_meter = tr.guard_meter.counts()
+    assert after_skip_meter["rollbacks"] == 0
+    if guard is not None:
+        assert after_skip_meter["skipped_steps"] == 1
+    else:
+        assert after_skip_meter["skipped_steps"] == 0   # nothing synced
+    # the poisoned step left the weights untouched; the clean one didn't
+    assert _leaves_equal(before, mid)
+    assert not _leaves_equal(mid, tr.params)
+
+
+def test_skip_budget_without_ckpt_raises_stepfailure(tiny_graph):
+    """Escalation with no ckpt_dir can't roll back — it must fail loudly
+    (StepFailure), not train on from a poisoned trajectory."""
+    tr = soak.make_trainer(tiny_graph, pipeline="sync", ckpt_dir=None,
+                           ckpt_every=0)
+    budget = soak.GUARD.max_consecutive_skips
+    plan = FaultPlan(specs=(FaultSpec("step_nonfinite", 0, budget + 1),))
+    with faults.inject(plan), pytest.raises(StepFailure):
+        tr.train_steps(budget + 2)
+
+
+# ---------------------------------------------------------------------------
+# the headline chaos soak: every fault class, bit-exact recovery
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def soak_ref(tiny_graph):
+    return soak.run_reference(tiny_graph, soak.N_STEPS)
+
+
+@pytest.mark.parametrize("site", faults.FAULT_SITES)
+def test_chaos_scenario_recovers_bit_exactly(tiny_graph, soak_ref, site):
+    """Inject one seeded fault of this class into a guarded
+    comm_rand x LABOR + dynamic-cache async run: the fault must fire,
+    the matching recovery mechanism must engage, and the final loss
+    trajectory AND parameter digest must be BIT-IDENTICAL to the
+    fault-free sync reference."""
+    res = soak.run_scenario(tiny_graph, site, ref=soak_ref)
+    assert res.fired > 0, "fault never fired — the scenario proves nothing"
+    assert res.recovered, f"expected recovery missing: {res.meter}"
+    assert res.bitmatch, "loss trajectory diverged from fault-free run"
+    assert res.digest_match, "final params differ from fault-free run"
+    assert res.ok
+
+
+# ---------------------------------------------------------------------------
+# producer watchdog (dedicated stream-level tests)
+# ---------------------------------------------------------------------------
+def _streams(tiny_graph, seed=5, **kw):
+    pol = make_policy("rand")
+    sync = BatchStream(tiny_graph, pol, BATCH, FANOUTS, CAPS, seed=seed)
+    asyn = AsyncBatchStream(tiny_graph, pol, BATCH, FANOUTS, CAPS,
+                            seed=seed, restart_backoff_s=0.01, **kw)
+    return sync, asyn
+
+
+def test_watchdog_restarts_hung_producer(tiny_graph):
+    """The producer stops heartbeating mid-epoch; the consumer's stall
+    watchdog restarts it from the pending cursor and the delivered
+    sequence stays bit-exact against the synchronous stream."""
+    meter = ResilienceMeter()
+    sync, asyn = _streams(tiny_graph, meter=meter)
+    asyn.prime()
+    asyn.stall_timeout_s = 0.4
+    plan = FaultPlan(specs=(FaultSpec("producer_hang", 2),))
+    try:
+        with faults.inject(plan):
+            it = iter(asyn)
+            got = [next(it) for _ in range(6)]
+    finally:
+        asyn.close()
+    assert plan.fired("producer_hang")
+    assert asyn.restarts >= 1
+    assert meter.producer_restarts >= 1
+    for i, b in enumerate(got):
+        want = sync.build(sync.root_batches(0)[i], 0, i)
+        assert _leaves_equal(want, b), i
+
+
+def test_watchdog_restarts_dead_producer_bit_exact(tiny_graph):
+    """A transient build failure kills the producer thread; the watchdog
+    restarts it from the same cursor — same batches, bit for bit."""
+    meter = ResilienceMeter()
+    sync, asyn = _streams(tiny_graph, meter=meter)
+    plan = FaultPlan(specs=(FaultSpec("batch_build", 3),))
+    try:
+        with faults.inject(plan):
+            it = iter(asyn)
+            got = [next(it) for _ in range(6)]
+    finally:
+        asyn.close()
+    assert plan.fired("batch_build")
+    assert meter.producer_restarts == 1
+    assert [e["reason"] for e in meter.events
+            if e["kind"] == "producer_restarts"]
+    for i, b in enumerate(got):
+        want = sync.build(sync.root_batches(0)[i], 0, i)
+        assert _leaves_equal(want, b), i
+
+
+def test_persistent_producer_error_reraises_real_exception(tiny_graph):
+    """Past the restart budget the consumer re-raises the producer's REAL
+    stashed exception (InjectedFault here), not a generic 'producer
+    died' wrapper — the satellite fix for the dropped-exception bug."""
+    _, asyn = _streams(tiny_graph, max_restarts=1)
+    plan = FaultPlan(specs=(FaultSpec("batch_build", 0, 10 ** 9),))
+    with faults.inject(plan), pytest.raises(InjectedFault):
+        next(iter(asyn))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity: CRC verification + restore_latest fallback
+# ---------------------------------------------------------------------------
+def _tree(s):
+    return {"w": jnp.arange(12.0).reshape(3, 4) * (s + 1),
+            "b": jnp.full((5,), s, jnp.int32)}
+
+
+def test_restore_rejects_bit_rot():
+    """A single flipped byte in a leaf file fails the CRC check."""
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, _tree(1))
+        leaf = os.path.join(d, "step_000000001", "leaf_0.npy")
+        with open(leaf, "r+b") as f:
+            f.seek(-1, os.SEEK_END)
+            byte = f.read(1)
+            f.seek(-1, os.SEEK_END)
+            f.write(bytes([byte[0] ^ 0xFF]))
+        with pytest.raises(ckpt.CheckpointCorrupt, match="checksum"):
+            ckpt.restore(d, 1, _tree(1))
+
+
+def test_restore_latest_falls_back_past_corrupt(tiny_graph):
+    """Newest checkpoint corrupt -> restore_latest lands on the next
+    valid one, invoking on_corrupt per skip; all corrupt -> (None,)*3."""
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3):
+            ckpt.save(d, s, _tree(s), extra={"s": s})
+        rng = np.random.default_rng(0)
+        skipped = []
+        corrupt_checkpoint(os.path.join(d, "step_000000003"), rng,
+                           mode="truncate", target="manifest.json")
+        step, tree, extra = ckpt.restore_latest(
+            d, _tree(0), on_corrupt=lambda s, e: skipped.append(s))
+        assert (step, extra["s"]) == (2, 2)
+        assert _leaves_equal(tree, _tree(2))
+        assert skipped == [3]
+        corrupt_checkpoint(os.path.join(d, "step_000000002"), rng,
+                           mode="flip", target="leaf_1.npy")
+        step, tree, extra = ckpt.restore_latest(d, _tree(0))
+        assert (step, extra["s"]) == (1, 1)
+        for s in (1,):
+            corrupt_checkpoint(os.path.join(d, f"step_{s:09d}"), rng,
+                               mode="truncate", target="leaf_0.npy")
+        assert ckpt.restore_latest(d, _tree(0)) == (None, None, None)
+
+
+def test_restore_rejects_leaf_count_mismatch():
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, _tree(1))
+        with pytest.raises(ckpt.CheckpointCorrupt, match="leaf count"):
+            ckpt.restore(d, 1, {"only": jnp.zeros(3)})
+
+
+def test_latest_step_and_gc_ignore_litter():
+    """`.tmp_save_*` crash litter and malformed step_* names neither
+    break latest_step/_gc nor survive the next save's sweep."""
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, _tree(1))
+        os.makedirs(os.path.join(d, ".tmp_save_dead"))
+        with open(os.path.join(d, ".tmp_save_dead", "leaf_0.npy"),
+                  "wb") as f:
+            f.write(b"partial")
+        os.makedirs(os.path.join(d, "step_garbage"))
+        assert ckpt.latest_step(d) == 1
+        ckpt.save(d, 2, _tree(2), keep=2)       # _gc sweeps the litter
+        assert not [x for x in os.listdir(d)
+                    if x.startswith(".tmp_save_")]
+        assert os.path.isdir(os.path.join(d, "step_garbage"))  # ignored
+        assert ckpt.latest_step(d) == 2
+
+
+# ---------------------------------------------------------------------------
+# caps-cache robustness (satellite)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("payload", [
+    b"{ not json", b"\xff\xfe garbage \x00", b"[1, 2, 3]", b""])
+def test_caps_calibrator_survives_corrupt_cache(tiny_graph, payload):
+    """A corrupt caps-cache JSON is a cache miss, not a crash: discard,
+    recalibrate, and the rewrite leaves a valid cache behind."""
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "caps.json")
+        with open(path, "wb") as f:
+            f.write(payload)
+        cal = CapsCalibrator(cache_path=path, n_probe=2, seed=0)
+        caps = cal.caps_for(tiny_graph, make_policy("rand"), BATCH, FANOUTS)
+        assert len(caps) == len(FANOUTS) and all(c > 0 for c in caps)
+        with open(path) as f:
+            assert isinstance(json.load(f), dict)   # healthy again
+        # warm read-back returns the same caps without reprobing
+        assert cal.caps_for(tiny_graph, make_policy("rand"), BATCH,
+                            FANOUTS) == caps
+
+
+def test_caps_calibrator_survives_corrupt_entry(tiny_graph):
+    """Valid JSON whose ENTRY is garbage (wrong arity, non-ints) falls
+    through to a reprobe instead of returning nonsense caps."""
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "caps.json")
+        cal = CapsCalibrator(cache_path=path, n_probe=2, seed=0)
+        pol = make_policy("rand")
+        caps = cal.caps_for(tiny_graph, pol, BATCH, FANOUTS)
+        key = cal.key(tiny_graph, pol, BATCH, FANOUTS)
+        for bad in (["x", "y"], [1], [0, -5], "nope"):
+            with open(path, "w") as f:
+                json.dump({key: bad}, f)
+            assert cal.caps_for(tiny_graph, pol, BATCH, FANOUTS) == caps
+
+
+# ---------------------------------------------------------------------------
+# dynamic-cache integrity check (degradation trigger)
+# ---------------------------------------------------------------------------
+def test_cache_integrity_check_detects_corruption(tiny_graph):
+    state = featcache.as_cache("dynamic:degree_hot", tiny_graph,
+                               policy=make_policy("rand"),
+                               batch_size=BATCH, fanouts=FANOUTS, seed=0)
+    assert fdyn.integrity_ok(state)
+    bad = fdyn._corrupt_state(state, np.random.default_rng(0))
+    assert not fdyn.integrity_ok(bad)
+    # a refill of a healthy state stays healthy
+    feats = jnp.asarray(tiny_graph.features)
+    new_state, _ = fdyn.refill(state, feats)
+    assert fdyn.integrity_ok(new_state)
