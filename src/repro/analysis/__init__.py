@@ -1,0 +1,38 @@
+"""`repro.analysis`: determinism & jit-hygiene static analysis.
+
+Two cooperating passes gate the training stack:
+
+- **AST lint** (`lint.py` + `rules.py`): a pluggable rule registry over
+  `ast` encoding the repo's written-but-unchecked invariants — no global
+  numpy/stdlib randomness, no wall clock in deterministic modules, no
+  host-sync idioms in hot-path functions, no f64 in device-facing code,
+  structured `(seed, salt)` tuples for every `np.random.default_rng`,
+  and no internal imports of deprecated shims. Legitimate uses carry a
+  per-line `# analysis: allow[<rule>] -- justification` waiver.
+
+- **Jaxpr contract auditor** (`jaxpr_audit.py`): traces the real jitted
+  artifacts (guarded train step, `DeviceBatchBuilder._fused_build`,
+  `device_epoch_order`, `gather_agg`/`gather_cached` fwd+bwd) and
+  statically asserts: no callback primitives, no f64 casts, donation
+  effective, Pallas paths actually contain `pallas_call` with no
+  fallback feature gather, and the jaxpr hash is stable across
+  (batch index, epoch, resume) variations — recompile drift is exactly
+  the bug class that silently erases pipeline overlap wins.
+
+Run locally with `python -m repro.analysis --strict` (or the
+`repro-analysis` console script); CI runs both passes and uploads the
+JSON report (`BENCH_analysis.json`-style: rule -> violations ->
+waivers).
+"""
+from repro.analysis.config import AnalysisConfig
+from repro.analysis.lint import LintReport, lint_paths, lint_source
+from repro.analysis.rules import RULES, Violation
+
+__all__ = [
+    "AnalysisConfig",
+    "LintReport",
+    "lint_paths",
+    "lint_source",
+    "RULES",
+    "Violation",
+]

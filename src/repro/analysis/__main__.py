@@ -1,0 +1,101 @@
+"""`python -m repro.analysis` — run the lint + jaxpr-audit gate.
+
+    python -m repro.analysis                  # report only, exit 0
+    python -m repro.analysis --strict         # CI gate: exit 1 on any
+                                              #  unwaived violation,
+                                              #  unjustified waiver, or
+                                              #  failed jaxpr contract
+    python -m repro.analysis --skip-jaxpr     # lint only (fast)
+    python -m repro.analysis --json out.json  # report path (default
+                                              #  BENCH_analysis.json)
+
+Scoping config comes from `[tool.repro_analysis]` in pyproject.toml
+when present (found by walking up from the package source), else the
+defaults in `analysis/config.py` — the two are kept in sync so local
+runs and CI agree.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.config import AnalysisConfig
+from repro.analysis.lint import lint_paths
+
+
+def _src_root() -> Path:
+    import repro
+    # repro is a namespace package (__file__ is None): locate via __path__
+    return Path(list(repro.__path__)[0]).resolve().parent
+
+
+def _load_config(src_root: Path) -> AnalysisConfig:
+    for parent in (src_root, *src_root.parents):
+        pyproject = parent / "pyproject.toml"
+        if pyproject.is_file():
+            try:
+                import tomllib
+            except ModuleNotFoundError:     # py<3.11: fall back to defaults
+                return AnalysisConfig()
+            with open(pyproject, "rb") as f:
+                return AnalysisConfig.from_pyproject(tomllib.load(f))
+    return AnalysisConfig()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-analysis",
+        description="determinism & jit-hygiene gate (AST lint + jaxpr "
+                    "contract audit)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on unwaived violations, "
+                         "unjustified waivers, or failed jaxpr contracts")
+    ap.add_argument("--skip-jaxpr", action="store_true",
+                    help="run only the AST lint (no tracing)")
+    ap.add_argument("--json", default="BENCH_analysis.json",
+                    help="report path (default: %(default)s)")
+    ap.add_argument("--src", default=None,
+                    help="source root to lint (default: the installed "
+                         "repro package's src directory)")
+    args = ap.parse_args(argv)
+
+    src_root = Path(args.src) if args.src else _src_root()
+    config = _load_config(src_root)
+    lint = lint_paths(src_root, config)
+    report = {"lint": lint.to_json()}
+
+    print(f"lint: {lint.files_checked} files, "
+          f"{len(lint.unwaived)} unwaived violation(s), "
+          f"{len(lint.waived)} audited waiver(s)")
+    for v in lint.unwaived:
+        print(f"  {v.path}:{v.line}:{v.col} [{v.rule}] {v.message}")
+    for v in lint.unjustified():
+        print(f"  {v.path}:{v.line} [{v.rule}] waiver has NO justification")
+    for u in lint.unknown_waivers:
+        print(f"  {u['path']}:{u['line']} waiver names unknown rule "
+              f"{u['rule']!r}")
+
+    jaxpr_ok = True
+    if not args.skip_jaxpr:
+        from repro.analysis.jaxpr_audit import audit_all
+        audit = audit_all()
+        report["jaxpr"] = audit
+        jaxpr_ok = bool(audit["ok"])
+        for section in ("donation", "kernels", "device_order",
+                        "fused_build", "train_step"):
+            print(f"jaxpr: {section:12s} "
+                  f"{'ok' if audit[section]['ok'] else 'FAIL'}")
+
+    strict_ok = lint.strict_ok() and not lint.unknown_waivers and jaxpr_ok
+    report["strict_ok"] = strict_ok
+    out = Path(args.json)
+    out.write_text(json.dumps(report, indent=1, default=str) + "\n")
+    print(f"report -> {out}  (strict {'PASS' if strict_ok else 'FAIL'})")
+
+    return 0 if (strict_ok or not args.strict) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,397 @@
+"""Jaxpr contract auditor: static checks over the real jitted artifacts.
+
+Where `lint.py` reads source, this pass reads what JAX will actually
+run: it traces the guarded train step, the fused device batch builder,
+the device epoch-order programs and the Pallas kernels, then walks the
+jaxprs (recursively, through pjit/custom_vjp sub-jaxprs) and asserts
+
+  * no callback primitives (`pure_callback`/`io_callback`/...): a
+    callback inside the step is a hidden host round-trip per dispatch;
+  * no `convert_element_type` to float64 and no f64 intermediate
+    anywhere — the stack is f32/int32 end to end;
+  * declared Pallas paths really contain `pallas_call`, and the fused
+    gather kernels never fall back to an XLA `gather` on a
+    feature-shaped (rows, F) float operand — the materialized gather is
+    exactly what the kernels exist to avoid;
+  * donated buffers are actually aliased in the lowering (the
+    epoch-order scratch recycling of `_pad_into`);
+  * **recompilation guard**: the jaxpr hash is identical across
+    (batch index, epoch, resume) variations — a changed hash means a
+    value that should be a traced argument got captured as a constant
+    (e.g. a weak-typed python scalar closed over instead of passed),
+    which silently retraces per step and erases the pipeline overlap.
+
+Everything here traces only (`jax.make_jaxpr` / `.lower()`): no kernel
+is executed, so the audit runs in seconds on a CPU-only CI runner with
+the Pallas paths in interpret mode.
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+from typing import Callable, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CALLBACK_MARKER = "callback"
+F64 = np.dtype(np.float64)
+
+
+def _is_f64(dtype) -> bool:
+    try:
+        return np.dtype(dtype) == F64
+    except TypeError:       # extended dtypes (PRNG keys) are never f64
+        return False
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+def _subjaxprs(value) -> Iterable:
+    """Jaxpr objects hiding inside an eqn param value (pjit bodies,
+    custom_vjp branches, scan/while carries), detected by duck type so
+    no internal jax.core classes are imported."""
+    if hasattr(value, "eqns"):              # a Jaxpr
+        yield value
+    elif hasattr(value, "jaxpr"):           # a ClosedJaxpr
+        yield value.jaxpr
+    elif isinstance(value, (list, tuple)):
+        for v in value:
+            yield from _subjaxprs(v)
+
+
+def iter_eqns(jaxpr) -> Iterable:
+    """Every eqn in `jaxpr` and, recursively, in nested sub-jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from iter_eqns(sub)
+
+
+def _as_jaxpr(closed):
+    return closed.jaxpr if hasattr(closed, "jaxpr") else closed
+
+
+def primitive_counts(closed) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for eqn in iter_eqns(_as_jaxpr(closed)):
+        name = eqn.primitive.name
+        counts[name] = counts.get(name, 0) + 1
+    return counts
+
+
+def callback_eqns(closed) -> List[str]:
+    return [e.primitive.name for e in iter_eqns(_as_jaxpr(closed))
+            if CALLBACK_MARKER in e.primitive.name]
+
+
+def f64_casts(closed) -> List[str]:
+    """`convert_element_type` eqns whose target dtype is float64."""
+    out = []
+    for eqn in iter_eqns(_as_jaxpr(closed)):
+        if eqn.primitive.name == "convert_element_type" and \
+                _is_f64(eqn.params.get("new_dtype")):
+            out.append(str(eqn))
+    return out
+
+
+def f64_avals(closed) -> List[str]:
+    """Any eqn output with a float64 abstract value."""
+    out = []
+    for eqn in iter_eqns(_as_jaxpr(closed)):
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            dtype = getattr(aval, "dtype", None)
+            if dtype is not None and _is_f64(dtype):
+                out.append(str(eqn))
+    return out
+
+
+def feature_gathers(closed, feat_dim: int) -> List[str]:
+    """XLA `gather` eqns whose operand is a feature-shaped (rows, F)
+    float matrix — the materialized fallback the fused kernels exist to
+    avoid. 1-D int gathers (position-map lookups) and non-feature
+    shapes are deliberately NOT flagged."""
+    out = []
+    for eqn in iter_eqns(_as_jaxpr(closed)):
+        if eqn.primitive.name != "gather":
+            continue
+        aval = getattr(eqn.invars[0], "aval", None)
+        shape = getattr(aval, "shape", ())
+        dtype = getattr(aval, "dtype", None)
+        if (dtype is not None and np.issubdtype(dtype, np.floating)
+                and len(shape) == 2 and shape[1] == feat_dim):
+            out.append(str(eqn))
+    return out
+
+
+_ADDR_RE = re.compile(r"0x[0-9a-f]+")
+
+
+def jaxpr_hash(closed) -> str:
+    """sha1 over the printed jaxpr — stable iff the trace is stable.
+    Printed form includes shapes, dtypes, primitive params and constvar
+    LITERALS, so a weak-typed scalar captured as a tracer-constant
+    changes the hash while the same scalar passed as an argument does
+    not. Memory addresses in function reprs (custom_jvp thunk params)
+    are canonicalized out — they vary per process, not per trace."""
+    text = _ADDR_RE.sub("0x0", str(closed))
+    return hashlib.sha1(text.encode()).hexdigest()
+
+
+def make_hash(fn: Callable, *args, **kwargs) -> str:
+    return jaxpr_hash(jax.make_jaxpr(fn)(*args, **kwargs))
+
+
+def _hygiene(closed, *, feat_dim: Optional[int] = None) -> dict:
+    """The common per-artifact checks; `ok` is their conjunction."""
+    cb, casts, avals = callback_eqns(closed), f64_casts(closed), \
+        f64_avals(closed)
+    rep = {"callbacks": len(cb), "f64_casts": len(casts),
+           "f64_avals": len(avals)}
+    if feat_dim is not None:
+        fg = feature_gathers(closed, feat_dim)
+        rep["feature_gathers"] = len(fg)
+    rep["ok"] = all(v == 0 for k, v in rep.items() if k != "ok")
+    return rep
+
+
+# ---------------------------------------------------------------------------
+# artifact audits
+# ---------------------------------------------------------------------------
+def audit_donation() -> dict:
+    """`_pad_into` donates the previous epoch's order scratch; the
+    lowering must carry the aliasing annotation (checked at the
+    STABLEHLO level — works even on CPU where the runtime would ignore
+    the donation and warn)."""
+    from repro.pipeline.builder import _pad_into
+    order = jnp.arange(96, dtype=jnp.int32)
+    scratch = jnp.full((128,), -1, jnp.int32)
+    text = _pad_into.lower(order, scratch).as_text()
+    aliased = "tf.aliasing_output" in text
+    return {"pad_into_aliased": aliased, "ok": aliased}
+
+
+def audit_kernels(*, n_src: int = 64, n_dst: int = 16, r: int = 4,
+                  feat_dim: int = 32, capacity: int = 8) -> dict:
+    """gather_agg / gather_cached fwd+bwd on the declared Pallas path
+    (interpret mode off-TPU): `pallas_call` present, no feature-shaped
+    fallback gather, no callbacks, no f64."""
+    from repro.kernels.gather_agg.ops import gather_agg
+    from repro.kernels.gather_cached.ops import gather_cached
+
+    x = jnp.ones((n_src, feat_dim), jnp.float32)
+    idx = jnp.zeros((n_dst, r), jnp.int32)
+    w = jnp.ones((n_dst, r), jnp.float32)
+
+    def agg_fwd(x, idx, w):
+        return gather_agg(x, idx, w, impl="pallas")
+
+    def agg_loss(x, w):
+        return gather_agg(x, idx, w, impl="pallas").sum()
+
+    cache = jnp.ones((capacity, feat_dim), jnp.float32)
+    pos = jnp.full((n_src,), -1, jnp.int32).at[:capacity].set(
+        jnp.arange(capacity))
+    ids = jnp.zeros((n_dst,), jnp.int32)
+
+    def cached_fwd(cache, feats, pos, ids):
+        return gather_cached(cache, feats, pos, ids, impl="pallas")
+
+    def cached_loss(cache, feats):
+        rows, _, _ = gather_cached(cache, feats, pos, ids, impl="pallas")
+        return rows.sum()
+
+    out = {}
+    for name, closed in (
+            ("gather_agg_fwd", jax.make_jaxpr(agg_fwd)(x, idx, w)),
+            ("gather_agg_bwd", jax.make_jaxpr(
+                jax.grad(agg_loss, argnums=(0, 1)))(x, w)),
+            ("gather_cached_fwd", jax.make_jaxpr(cached_fwd)(
+                cache, x, pos, ids)),
+            ("gather_cached_bwd", jax.make_jaxpr(
+                jax.grad(cached_loss, argnums=(0, 1)))(cache, x))):
+        rep = _hygiene(closed, feat_dim=feat_dim)
+        rep["pallas_calls"] = primitive_counts(closed).get("pallas_call", 0)
+        rep["ok"] = rep["ok"] and rep["pallas_calls"] >= 1
+        out[name] = rep
+    out["ok"] = all(out[k]["ok"] for k in out if k != "ok")
+    return out
+
+
+def _policies() -> Dict[str, object]:
+    from repro.batching.policy import make_policy
+    return {name: make_policy(name)
+            for name in ("rand", "norand", "comm_rand", "clustergcn",
+                         "labor")}
+
+
+def audit_device_order(graph, *, seed: int = 7) -> dict:
+    """Per policy: the device epoch-order program is callback- and
+    f64-free, and its jaxpr hash is identical across epochs AND across a
+    fresh `OrderSpec` (resume): only the two uint32 epoch words may vary
+    per epoch, and they ride in as arguments."""
+    from repro.pipeline.device_order import (OrderSpec, device_epoch_order,
+                                             epoch_words_for)
+    out = {}
+    for name, policy in _policies().items():
+        spec = OrderSpec.for_policy(graph, policy)
+        spec2 = OrderSpec.for_policy(graph, policy)     # resume: rebuilt
+
+        hashes = [
+            make_hash(lambda w: device_epoch_order(spec, w),
+                      epoch_words_for(seed, 0)),
+            make_hash(lambda w: device_epoch_order(spec, w),
+                      epoch_words_for(seed, 1)),
+            make_hash(lambda w: device_epoch_order(spec, w),
+                      epoch_words_for(seed + 1, 0)),
+            make_hash(lambda w: device_epoch_order(spec2, w),
+                      epoch_words_for(seed, 0)),
+        ]
+        closed = jax.make_jaxpr(lambda w: device_epoch_order(spec, w))(
+            epoch_words_for(seed, 0))
+        rep = _hygiene(closed)
+        rep["hash"] = hashes[0]
+        rep["stable"] = len(set(hashes)) == 1
+        rep["ok"] = rep["ok"] and rep["stable"]
+        out[name] = rep
+    out["ok"] = all(out[k]["ok"] for k in out if k != "ok")
+    return out
+
+
+def _trace_fused(builder, epoch: int, pos: int):
+    """make_jaxpr over the fused build at cursor (epoch, pos), with
+    everything per-batch — key, epoch, pos, the resident order, the
+    shared sampler ctx — as traced ARGUMENTS, exactly as dispatched."""
+    from repro.pipeline.builder import _fused_build
+    b = builder
+    order = b.epoch_roots(epoch)
+    ctx = b.epoch_ranks(epoch)
+
+    def traced(seed_key, e, p, order_pad, *maybe_ctx):
+        shared = maybe_ctx[0] if maybe_ctx else None
+        return _fused_build(seed_key, e, p, b.g, order_pad, b.labels,
+                            shared, b.batch_size, b.fanouts, b.caps,
+                            b.sampler)
+
+    args = [b._seed_key, jnp.asarray(epoch, jnp.int32),
+            jnp.asarray(pos, jnp.int32), order]
+    if ctx is not None:
+        args.append(ctx)
+    return jax.make_jaxpr(traced)(*args)
+
+
+def audit_fused_build(graph, *, batch_size: int = 128,
+                      fanouts=(5, 5), caps=(512, 1024),
+                      seed: int = 7) -> dict:
+    """Per policy: the fused builder jaxpr is callback-/f64-free and its
+    hash is invariant across (pos, epoch, fresh-builder resume) — the
+    static args (B, fanouts, caps, sampler) are the ONLY trace keys, so
+    every batch of every epoch reuses one compilation."""
+    from repro.pipeline.builder import DeviceBatchBuilder
+    out = {}
+    for name, policy in _policies().items():
+        b = DeviceBatchBuilder(graph, policy, batch_size, fanouts, caps,
+                               seed=seed)
+        b2 = DeviceBatchBuilder(graph, policy, batch_size, fanouts, caps,
+                                seed=seed)              # resume: rebuilt
+        closed = _trace_fused(b, 0, 0)
+        hashes = [jaxpr_hash(closed),
+                  jaxpr_hash(_trace_fused(b, 0, 1)),
+                  jaxpr_hash(_trace_fused(b, 1, 0)),
+                  jaxpr_hash(_trace_fused(b2, 0, 0))]
+        rep = _hygiene(closed)
+        rep["hash"] = hashes[0]
+        rep["stable"] = len(set(hashes)) == 1
+        rep["ok"] = rep["ok"] and rep["stable"]
+        out[name] = rep
+    out["ok"] = all(out[k]["ok"] for k in out if k != "ok")
+    return out
+
+
+def _make_trainer(graph, *, agg_impl: str = "auto", cache="dynamic:degree_hot",
+                  seed: int = 3):
+    from repro.batching.policy import make_policy
+    from repro.configs.base import GNNConfig, TrainConfig
+    from repro.train.gnn_loop import GNNTrainer
+    cfg = GNNConfig("sage-audit", "sage", 2, 16, graph.feat_dim,
+                    graph.num_classes, fanout=(5, 5), agg_impl=agg_impl)
+    tcfg = TrainConfig(batch_size=128, max_epochs=1)
+    return GNNTrainer(graph, cfg, tcfg, make_policy("comm_rand"),
+                      caps=(512, 1024), eval_caps=(512, 1024), seed=seed,
+                      cache=cache, pipeline="sync")
+
+
+def _trace_train_step(tr, batch, *, poison: float = 1.0,
+                      lr: float = 1e-3, key_seed: int = 0):
+    return jax.make_jaxpr(tr.train_step)(
+        tr.params, tr.opt_state, batch, tr.feats, tr.degrees, lr,
+        jax.random.key(key_seed), tr.cache, poison, tr._skips)
+
+
+def audit_train_step(graph) -> dict:
+    """The guarded train step (dynamic cache attached, the richest
+    path): no callbacks, no f64, and — the recompile guard — one jaxpr
+    hash across poison on/off (the chaos scalar rides as a weak-typed
+    ARGUMENT), lr changes, dropout keys, batch index and a fresh trainer
+    (resume)."""
+    from repro.pipeline.builder import DeviceBatchBuilder
+    tr = _make_trainer(graph)
+    b = DeviceBatchBuilder.from_stream(tr.stream)
+    batch0, batch1 = b.build(0, 0), b.build(0, 1)
+
+    closed = _trace_train_step(tr, batch0)
+    hashes = [jaxpr_hash(closed),
+              jaxpr_hash(_trace_train_step(tr, batch0,
+                                           poison=float("nan"))),
+              jaxpr_hash(_trace_train_step(tr, batch0, lr=3e-4,
+                                           key_seed=5)),
+              jaxpr_hash(_trace_train_step(tr, batch1))]
+    tr2 = _make_trainer(graph)                          # resume: rebuilt
+    b2 = DeviceBatchBuilder.from_stream(tr2.stream)
+    hashes.append(jaxpr_hash(_trace_train_step(tr2, b2.build(0, 0))))
+
+    rep = _hygiene(closed)
+    rep["hash"] = hashes[0]
+    rep["stable"] = len(set(hashes)) == 1
+    rep["ok"] = rep["ok"] and rep["stable"]
+
+    # the declared-Pallas config: kernels must show up as pallas_call
+    tr_p = _make_trainer(graph, agg_impl="pallas")
+    b_p = DeviceBatchBuilder.from_stream(tr_p.stream)
+    closed_p = _trace_train_step(tr_p, b_p.build(0, 0))
+    pallas = primitive_counts(closed_p).get("pallas_call", 0)
+    rep["pallas"] = {
+        "pallas_calls": pallas,
+        **{k: v for k, v in _hygiene(closed_p).items() if k != "ok"}}
+    rep["pallas"]["ok"] = pallas >= 1 and _hygiene(closed_p)["ok"]
+    rep["ok"] = rep["ok"] and rep["pallas"]["ok"]
+
+    # eval step rides along: same hygiene bar, no grad/guard machinery
+    closed_e = jax.make_jaxpr(tr.eval_step)(
+        tr.params, batch0, tr.feats, tr.degrees, tr.cache)
+    rep["eval"] = _hygiene(closed_e)
+    rep["ok"] = rep["ok"] and rep["eval"]["ok"]
+    return rep
+
+
+def audit_all(graph=None) -> dict:
+    """The full contract audit (the CLI's --jaxpr pass). `graph`
+    defaults to the pinned `tiny` synthetic dataset — audits trace but
+    never execute, so size only affects trace time."""
+    if graph is None:
+        from repro.core.reorder import prepare
+        from repro.graphs.synthetic import load
+        graph = prepare(load("tiny"), oracle=True)
+    report = {
+        "donation": audit_donation(),
+        "kernels": audit_kernels(feat_dim=graph.feat_dim),
+        "device_order": audit_device_order(graph),
+        "fused_build": audit_fused_build(graph),
+        "train_step": audit_train_step(graph),
+    }
+    report["ok"] = all(report[k]["ok"] for k in report if k != "ok")
+    return report

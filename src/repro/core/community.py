@@ -22,7 +22,10 @@ def _local_moving(indptr, indices, comm, max_sweeps=5, rng=None):
     np.add.at(sigma_tot, comm, deg)
     improved_any = False
     order = np.arange(N)
-    rng = rng or np.random.default_rng(0)
+    # salt 0 is the reserved legacy slot: a trailing-zero SeedSequence
+    # tuple spawns the SAME stream as the old bare-int seed, so pinned
+    # partitions stay bit-stable (new call sites take nonzero salts)
+    rng = rng or np.random.default_rng((0, 0))
     for _ in range(max_sweeps):
         rng.shuffle(order)
         moved = 0
@@ -75,7 +78,7 @@ def _aggregate(indptr, indices, comm, n_comm):
 
 def louvain(indptr, indices, levels: int = 2, seed: int = 0) -> np.ndarray:
     """Returns community id per node (int32, compacted)."""
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng((seed, 0))  # salt 0: legacy stream slot
     N = len(indptr) - 1
     comm = np.arange(N, dtype=np.int32)
     comm, _ = _local_moving(indptr, indices, comm, rng=rng)

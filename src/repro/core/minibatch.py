@@ -207,7 +207,10 @@ def calibrate_caps(graph: Graph, policy, batch_size: int,
     Probe batch indices are drawn uniformly across the epoch: under
     comm_rand the LEADING batches of an epoch order are community-pure and
     under-estimate the footprint of the late, mixed batches."""
-    rng = np.random.default_rng(seed)
+    # salt 0 = legacy stream slot (trailing-zero tuples are
+    # stream-identical by the SeedSequence spec): calibrated caps
+    # stay bit-stable against pre-conversion runs
+    rng = np.random.default_rng((seed, 0))
     s = sampling.for_policy(policy)
     maxes = np.zeros(len(fanouts), np.int64)
     probes = 0

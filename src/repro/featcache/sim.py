@@ -243,7 +243,7 @@ def policy_access_stream(graph, policy, batch_size, fanouts, n_batches=16,
     from repro import sampling
     from repro.core import partition
     from repro.core.minibatch import build_batch_np
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng((seed, 0))  # salt 0: legacy stream slot
     batches = partition.batches_for_epoch(
         graph.train_ids, graph.communities, policy, batch_size, rng)
     sampler = sampling.for_policy(policy)

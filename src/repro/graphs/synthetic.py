@@ -58,7 +58,10 @@ def _community_sizes(rng, spec) -> np.ndarray:
 
 
 def generate(spec: SBMSpec) -> Graph:
-    rng = np.random.default_rng(spec.seed)
+    # salt 0 = legacy stream slot: trailing-zero SeedSequence tuples
+    # spawn the SAME stream as the bare int, so every pinned DATASETS
+    # graph is bit-identical to pre-conversion builds
+    rng = np.random.default_rng((spec.seed, 0))
     N, C = spec.num_nodes, spec.num_communities
     sizes = _community_sizes(rng, spec)
     comm_of = np.repeat(np.arange(C, dtype=np.int32), sizes)

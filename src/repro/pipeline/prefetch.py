@@ -103,6 +103,7 @@ class AsyncBatchStream(BatchStream):
     def _produce(self, epoch: int, pos: int, gen: int, q) -> None:
         try:
             while not self._stop.is_set() and gen == self._gen:
+                # analysis: allow[no-wall-clock] -- watchdog heartbeat: liveness only, never influences delivered batch data
                 self._beat = time.monotonic()
                 if self.num_batches(epoch) == 0:
                     return          # consumer raises; nothing to build
@@ -115,6 +116,7 @@ class AsyncBatchStream(BatchStream):
                     return
                 batch = self.builder.build(epoch, pos)
                 while gen == self._gen and not self._stop.is_set():
+                    # analysis: allow[no-wall-clock] -- watchdog heartbeat: liveness only, never influences delivered batch data
                     self._beat = time.monotonic()   # full queue is healthy
                     try:
                         q.put((epoch, pos, batch), timeout=_POLL_S)
@@ -137,6 +139,7 @@ class AsyncBatchStream(BatchStream):
         self._gen += 1              # in-flight producer drains out and exits
         self._queue = queue.Queue(maxsize=self.depth)
         self._next_out = (epoch, pos)
+        # analysis: allow[no-wall-clock] -- watchdog grace period on restart; batches remain pure in (epoch, pos)
         self._beat = time.monotonic()   # fresh grace period
         self._thread = threading.Thread(
             target=self._produce, args=(epoch, pos, self._gen, self._queue),
@@ -146,6 +149,7 @@ class AsyncBatchStream(BatchStream):
     # -- consumer + watchdog ------------------------------------------------
     def _stalled(self) -> bool:
         return (self.stall_timeout_s is not None and self._beat is not None
+                # analysis: allow[no-wall-clock] -- stall detection compares heartbeats; recovery replays the same cursor bit-exactly
                 and time.monotonic() - self._beat > self.stall_timeout_s)
 
     def _recover(self, epoch: int, pos: int, reason: BaseException) -> None:

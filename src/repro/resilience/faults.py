@@ -99,7 +99,7 @@ class FaultPlan:
         site -> how many consecutive invocations stay armed (default 1).
         Sites are visited in `FAULT_SITES` order so the draws are a pure
         function of (seed, windows)."""
-        rng = np.random.default_rng(seed)
+        rng = np.random.default_rng((seed, 0))  # salt 0: legacy slot
         counts = counts or {}
         specs = []
         for site in FAULT_SITES:

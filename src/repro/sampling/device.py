@@ -236,6 +236,7 @@ class LaborSampler:
                 "DeviceGraph.max_degree is unset; rebuild the device graph "
                 "with DeviceGraph.from_graph for the LABOR sampler")
         M = nodes.shape[0]
+        # analysis: allow[no-host-sync-in-hot-path] -- g.max_degree is static Python metadata on DeviceGraph (trace-time branch above), not a traced array
         D = max(int(g.max_degree), fanout, 1)
         valid, safe, start, deg = _row_meta(g, nodes)
         j = jnp.arange(D)

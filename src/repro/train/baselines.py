@@ -76,7 +76,7 @@ def train_clustergcn(graph: Graph, cfg: GNNConfig, tcfg: TrainConfig,
                      parts_per_batch: int = 2, seed: int = 0,
                      epochs: int = None):
     """Returns dict with per-epoch time / val acc (paper Table 4 / Fig 8)."""
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng((seed, 0))  # salt 0: legacy stream slot
     params = init_gnn(cfg, jax.random.key(seed))
     opt = adamw.init(params)
     feats = jnp.asarray(graph.features)
@@ -192,7 +192,7 @@ def labor_lite_epoch_footprint(graph: Graph, batches: np.ndarray,
     """Unique-footprint comparison: neighbors picked by the globally-shared
     per-node hash ranks (LABOR's dependent sampling), no community info.
     Returns mean unique input nodes per batch."""
-    rng = np.random.default_rng(seed)
+    rng = np.random.default_rng((seed, 0))  # salt 0: legacy stream slot
     rank = rng.random(graph.num_nodes)        # shared randomness
     sizes = []
     for b in batches:
