@@ -144,17 +144,19 @@ def write_bench_json(entries: dict, path: str = BENCH_JSON) -> None:
     Existing keys from other bench drivers are preserved."""
     import json
 
-    import jax
+    from repro.obs.metrics import run_metadata
     data = {}
     if os.path.exists(path):
         with open(path) as f:
             data = json.load(f)
     data.update(entries)
-    data["_meta"] = {"backend": jax.default_backend(),
-                     "jax": jax.__version__,
-                     "note": "off-TPU, pallas runs in interpret mode: "
-                             "us timings there are shape-validation only; "
-                             "compare the analytic hbm_bytes"}
+    # shared run-metadata header (repro.obs): schema/backend/jax/
+    # git_commit/hostname — CI asserts these keys on every artifact
+    data["_meta"] = dict(
+        run_metadata(),
+        note="off-TPU, pallas runs in interpret mode: "
+             "us timings there are shape-validation only; "
+             "compare the analytic hbm_bytes")
     with open(path, "w") as f:
         json.dump(data, f, indent=1, sort_keys=True)
         f.write("\n")

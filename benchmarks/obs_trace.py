@@ -1,0 +1,118 @@
+"""Traced async smoke run: the CI artifact behind `repro.obs`'s claims.
+
+Drives the async comm_rand x LABOR + dynamic-cache trainer (the soak
+configuration, guard and checkpointing off — both would add sanctioned
+per-step syncs that belong to OTHER benches) for a few epochs with the
+span tracer installed, then:
+
+  1. runs the trace analyzer (`repro.obs.report`) and ASSERTS the two
+     runtime claims the static lint cannot prove:
+       - producer/consumer overlap fraction > 0 (the async prefetcher
+         really hides batch construction behind train steps)
+       - zero mid-epoch host-sync spans (every cat="sync" span sits at
+         an epoch boundary)
+  2. re-runs the SAME training untraced and asserts the per-epoch loss
+     trajectory is BIT-IDENTICAL — tracing is observation, not
+     perturbation
+  3. merges the numbers + the MetricsHub export into `BENCH_obs.json`
+     and writes the trace (JSONL + Perfetto traceEvents) under
+     benchmarks/artifacts/ for `python -m repro.obs` / ui.perfetto.dev.
+
+    PYTHONPATH=src python benchmarks/obs_trace.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+from benchmarks.common import _REPO_ROOT, dataset, emit, write_bench_json
+from repro.obs import report as obs_report
+from repro.obs import trace as obs_trace
+from repro.resilience import soak
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+TRACE_JSONL = os.path.join(ARTIFACTS, "obs_trace.jsonl")
+TRACE_CHROME = os.path.join(ARTIFACTS, "obs_trace_chrome.json")
+BENCH_OBS = os.path.join(_REPO_ROOT, "BENCH_obs.json")
+
+
+def _run_epochs(g, epochs: int, traced: bool):
+    """The soak trainer config (async pipeline, dynamic cache), guard and
+    ckpt off; returns (per-epoch dicts, trainer)."""
+    tr = soak.make_trainer(g, pipeline="async", guard=None, ckpt_dir=None)
+    tr.warmup()
+    out = [tr.run_epoch(1e-3) for _ in range(epochs)]
+    tr.stream.close()
+    return out, tr
+
+
+def main(smoke: bool = False):
+    epochs = 2 if smoke else 4
+    g = dataset("tiny")
+    os.makedirs(ARTIFACTS, exist_ok=True)
+
+    with obs_trace.enabled(TRACE_JSONL, run="obs_smoke",
+                           pipeline="async") as tracer:
+        traced, trainer = _run_epochs(g, epochs, traced=True)
+        tracer.flush()
+
+    events = obs_report.load_trace(TRACE_JSONL)
+    rep = obs_report.analyze(events)
+    obs_report.to_chrome(events, TRACE_CHROME)
+
+    ov = rep["overlap"]
+    emit("obs/overlap", ov["overlap_s"] * 1e6,
+         f"frac={ov['overlap_frac']:.3f} "
+         f"producer_busy={ov['producer_busy_s']:.3f}s")
+    emit("obs/mid_epoch_syncs", 0.0, f"count={rep['mid_epoch_sync_count']}")
+    for name, e in sorted(rep["stalls"].items()):
+        emit(f"obs/stall/{name}", e["total_s"] * 1e6,
+             f"count={e['count']} frac={e['frac_of_wall']:.3f}")
+
+    # claim 1: the async producer genuinely overlaps consumer steps
+    assert ov["overlap_frac"] > 0, \
+        f"no producer/consumer overlap measured: {ov}"
+    # claim 2: every host sync sits at an epoch boundary
+    assert rep["mid_epoch_sync_count"] == 0, \
+        f"mid-epoch syncs: {[e['mid_epoch_sync_names'] for e in rep['epochs']]}"
+    assert not rep["conformance_problems"], rep["conformance_problems"][:5]
+
+    # claim 3: tracing is bit-exact — untraced run, same trajectory
+    untraced, _ = _run_epochs(g, epochs, traced=False)
+    t_loss = [e["loss"] for e in traced]
+    u_loss = [e["loss"] for e in untraced]
+    emit("obs/bit_exact", 0.0, f"traced==untraced: {t_loss == u_loss}")
+    assert t_loss == u_loss, \
+        f"tracing perturbed the loss trajectory: {t_loss} != {u_loss}"
+
+    entries = {
+        "obs/overlap": {k: round(v, 6) for k, v in ov.items()},
+        "obs/stalls": {k: {"count": e["count"],
+                           "total_s": round(e["total_s"], 6)}
+                       for k, e in rep["stalls"].items()},
+        "obs/sync_sites": {k: e["count"]
+                           for k, e in rep["sync_sites"].items()},
+        "obs/mid_epoch_sync_count": rep["mid_epoch_sync_count"],
+        "obs/epochs": [{"epoch": e["epoch"], "n_steps": e["n_steps"],
+                        "dur_s": round(e["dur_s"], 4),
+                        "mid_epoch_syncs": e["mid_epoch_syncs"]}
+                       for e in rep["epochs"]],
+        "obs/bit_exact_loss_trajectory": t_loss == u_loss,
+        "obs/n_events": rep["n_events"],
+        "obs/hub": trainer.hub.export(),
+        "obs/straggler_fraction":
+            round(trainer.straggler.straggler_fraction, 4),
+        "obs/config": {"graph": "tiny", "epochs": epochs,
+                       "pipeline": "async", "guard": None, "ckpt": None,
+                       "trace": os.path.relpath(TRACE_JSONL, _REPO_ROOT)},
+    }
+    write_bench_json(entries, path=BENCH_OBS)
+    print(f"trace -> {TRACE_JSONL}")
+    print(f"perfetto -> {TRACE_CHROME}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="2 epochs (CI); full runs 4")
+    main(**vars(ap.parse_args()))

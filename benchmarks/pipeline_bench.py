@@ -5,12 +5,16 @@ Per variant the bench drives a consumer loop that mimics a train step (a
 jitted stack of matmuls over the batch's gathered feature rows) and
 measures:
 
-  batches_per_s       delivered batch rate, consumer work included
+  batches_per_s       delivered batch rate (MEDIAN over repeated runs,
+                      consumer work included) — plus best_batches_per_s
+                      (max over runs) and iqr_batches_per_s (p75 - p25,
+                      the run-to-run noise band; a speedup smaller than
+                      the IQR is noise, not signal)
   consumer_stall_frac fraction of wall time the consumer spends BLOCKED
                       waiting for the next batch (the device-idle proxy:
                       while the consumer is stalled there is no train
-                      step in flight)
-  us_per_batch        1e6 / batches_per_s
+                      step in flight); median run's value
+  us_per_batch        1e6 / batches_per_s (median)
 
 plus the per-stage build breakdown (`pipeline/build_breakdown`: roots /
 sample / dedup, from `repro.pipeline.stage_times`) and the device-order
@@ -102,38 +106,55 @@ def main(smoke: bool = False):
     feats = jnp.asarray(g.features, jnp.float32)
     step = _consumer(feats, g.feat_dim)
 
-    def best_of(factory, runs: int = 2):
-        """Best-of-`runs` measurement (fresh stream each run: timing
-        noise on shared CI runners shouldn't decide sync-vs-async)."""
-        best = None
+    runs = 3 if smoke else 5
+
+    def measure(factory):
+        """Repeated measurement, fresh stream each run: report the MEDIAN
+        run (robust central tendency on shared CI runners) alongside the
+        best and the IQR noise band — best-of-2 hid the spread entirely."""
+        results = []
         for _ in range(runs):
             stream = factory()
             try:
-                r = _drive(stream, step, n)
+                results.append(_drive(stream, step, n))
             finally:
                 getattr(stream, "close", lambda: None)()
-            if best is None or r["batches_per_s"] > best["batches_per_s"]:
-                best = r
-        return best
+        results.sort(key=lambda r: r["batches_per_s"])
+        rates = [r["batches_per_s"] for r in results]
+        med = dict(results[len(results) // 2])  # median-rate run's stats
+        med["batches_per_s"] = float(np.median(rates))
+        med["us_per_batch"] = 1e6 / med["batches_per_s"]
+        med["best_batches_per_s"] = max(rates)
+        med["iqr_batches_per_s"] = float(np.percentile(rates, 75)
+                                         - np.percentile(rates, 25))
+        med["runs"] = [round(r, 2) for r in rates]
+        return med
 
     sync = BatchStream(g, pol, **kw)      # kept for breakdown inputs below
-    res_sync = best_of(lambda: BatchStream(g, pol, **kw))
+    res_sync = measure(lambda: BatchStream(g, pol, **kw))
     emit(f"pipeline/sync/{graph_name}", res_sync["us_per_batch"],
          f"batches_per_s={res_sync['batches_per_s']:.1f} "
+         f"iqr={res_sync['iqr_batches_per_s']:.1f} "
          f"stall={res_sync['consumer_stall_frac']:.3f}")
     entries["pipeline/sync"] = dict(res_sync, graph=graph_name,
                                     batch=batch)
 
-    res_async = best_of(lambda: AsyncBatchStream(g, pol, **kw))
+    res_async = measure(lambda: AsyncBatchStream(g, pol, **kw))
     emit(f"pipeline/async/{graph_name}", res_async["us_per_batch"],
          f"batches_per_s={res_async['batches_per_s']:.1f} "
+         f"iqr={res_async['iqr_batches_per_s']:.1f} "
          f"stall={res_async['consumer_stall_frac']:.3f}")
     entries["pipeline/async"] = dict(res_async, graph=graph_name,
                                      batch=batch, depth=2)
 
     speedup = res_async["batches_per_s"] / res_sync["batches_per_s"]
-    emit(f"pipeline/speedup/{graph_name}", 0.0, f"async/sync={speedup:.3f}")
+    best_speedup = (res_async["best_batches_per_s"]
+                    / res_sync["best_batches_per_s"])
+    emit(f"pipeline/speedup/{graph_name}", 0.0,
+         f"async/sync={speedup:.3f} best={best_speedup:.3f}")
     entries["pipeline/speedup"] = {"async_over_sync": speedup,
+                                   "best_async_over_sync": best_speedup,
+                                   "runs": runs,
                                    "graph": graph_name}
 
     # per-stage split of one representative batch build

@@ -90,6 +90,8 @@ def main(argv=None) -> int:
 
     strict_ok = lint.strict_ok() and not lint.unknown_waivers and jaxpr_ok
     report["strict_ok"] = strict_ok
+    from repro.obs.metrics import run_metadata
+    report["_meta"] = run_metadata()    # shared artifact header (repro.obs)
     out = Path(args.json)
     out.write_text(json.dumps(report, indent=1, default=str) + "\n")
     print(f"report -> {out}  (strict {'PASS' if strict_ok else 'FAIL'})")

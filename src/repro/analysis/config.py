@@ -36,13 +36,19 @@ DETERMINISTIC_PREFIXES: Tuple[str, ...] = (
 HOT_FUNCTIONS: Dict[str, Tuple[str, ...]] = {
     "repro/train/gnn_loop.py": ("train_step", "eval_step", "loss_fn",
                                 "keep", "_train_one", "_guard_check",
-                                "run_epoch", "train_steps", "evaluate"),
+                                "run_epoch", "train_steps", "evaluate",
+                                "_evaluate"),
     "repro/pipeline/builder.py": ("_fused_build", "_pad_into",
                                   "_pad_fresh", "build", "_time_us"),
     "repro/pipeline/device_order.py": ("device_epoch_order",
                                        "_order_perm", "_order_comm_rand",
                                        "_order_clustergcn", "_hash_u32"),
     "repro/pipeline/prefetch.py": ("_produce",),
+    # the tracer's hot-path entry points must themselves never sync:
+    # tracing is sold as zero-device-impact, so the lint bans host-sync
+    # idioms inside every function a traced step calls per span
+    "repro/obs/trace.py": ("span", "instant", "note", "flush",
+                           "_emit", "__enter__", "__exit__"),
     "repro/core/minibatch.py": ("_build_batch_impl", "_positions"),
     "repro/sampling/device.py": ("sample", "_sample_level", "_topk_mask",
                                  "_hash_rank01", "epoch_ctx"),

@@ -63,6 +63,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.featcache.plan import (CachePlan, as_plan, build_plan,
                                   cache_ref_updates_np)
 from repro.kernels.gather_cached.ops import cache_ref_updates
@@ -263,7 +264,8 @@ def refill(state: DynamicCacheState,
 
     Must be called OUTSIDE differentiated code (the trainer refills
     between batches at epoch boundaries). Oracle: `refill_np`."""
-    new_state, admitted = _refill_jit(state, feats)
+    with obs_trace.span("clock_refill", cat="cache"):
+        new_state, admitted = _refill_jit(state, feats)
     spec = faults.fire("cache_corrupt")
     if spec is not None:
         # chaos site (repro.resilience): hand back a state whose

@@ -1,0 +1,188 @@
+"""`MetricsHub`: one registry for every runtime metric the stack emits.
+
+Before `repro.obs`, each subsystem metered itself its own way: the
+feature cache through `HitRateMeter`, recovery actions through
+`ResilienceMeter`, step-time outliers through `StragglerMonitor` (wired
+into the LM loop only), benchmarks through ad-hoc dicts. The hub absorbs
+them behind one registry of three primitive types:
+
+  Counter    monotonically increasing int (cache hits, skipped steps)
+  Gauge      last-written value (straggler fraction, current lr)
+  Histogram  value distribution with count/sum/min/max + percentiles
+             (step dispatch times)
+
+The legacy meters keep their exact public behaviour — every existing
+test and consumer is untouched — but accept an optional `hub=`; when
+attached, every mutation mirrors into canonically named hub series
+("cache/hits", "resilience/rollbacks", "straggler/fraction", ...), and
+tests pin that the mirrored values equal the meter's own on a real
+training run (meter-absorption equivalence).
+
+Per-epoch snapshots: `mark_epoch(epoch)` closes a window — the deltas of
+every counter since the previous mark plus current gauge values — and
+appends it to `hub.epochs`, giving the per-epoch trajectory exporters
+and the trace analyzer join against.
+
+Export schema (versioned — consumers check `schema`): `export()` returns
+`{"schema": OBS_SCHEMA_VERSION, "meta": run_metadata(), "metrics": ...,
+"epochs": [...]}`. `run_metadata()` is also the shared run-metadata
+header every `BENCH_*.json` artifact carries (schema version, backend,
+jax version, git commit, hostname) so benchmark numbers are attributable
+to the code + machine that produced them.
+"""
+from __future__ import annotations
+
+import os
+import socket
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+OBS_SCHEMA_VERSION = 1
+
+
+def run_metadata() -> Dict:
+    """The shared run-metadata header: who/what/where produced an
+    artifact. Keys are stable (CI asserts their presence in every
+    BENCH_*.json): schema, backend, jax, git_commit, hostname, python."""
+    import jax
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        commit = ""
+    return {"schema": OBS_SCHEMA_VERSION,
+            "backend": jax.default_backend(),
+            "jax": jax.__version__,
+            "git_commit": commit or "unknown",
+            "hostname": socket.gethostname(),
+            "python": sys.version.split()[0]}
+
+
+class Counter:
+    """Monotonic counter. `inc` rejects negative deltas — a decreasing
+    'counter' is a gauge and would silently corrupt per-epoch deltas."""
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        if n < 0:
+            raise ValueError(f"counter {self.name}: negative inc {n}")
+        self.value += n
+
+
+class Gauge:
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Keeps every observation (runs here are bounded: one value per
+    step or epoch) and summarizes with exact percentiles."""
+    __slots__ = ("name", "values")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.values: List[float] = []
+
+    def observe(self, v: float) -> None:
+        self.values.append(float(v))
+
+    @property
+    def count(self) -> int:
+        return len(self.values)
+
+    @property
+    def sum(self) -> float:
+        return float(sum(self.values))
+
+    def percentile(self, q: float) -> float:
+        """Exact nearest-rank percentile (q in [0, 100]) — 0 when empty."""
+        if not self.values:
+            return 0.0
+        vs = sorted(self.values)
+        idx = min(len(vs) - 1, max(0, round(q / 100.0 * (len(vs) - 1))))
+        return vs[idx]
+
+    def summary(self) -> Dict:
+        if not self.values:
+            return {"count": 0, "sum": 0.0, "min": 0.0, "max": 0.0,
+                    "p50": 0.0, "p90": 0.0, "p99": 0.0}
+        return {"count": self.count, "sum": self.sum,
+                "min": min(self.values), "max": max(self.values),
+                "p50": self.percentile(50), "p90": self.percentile(90),
+                "p99": self.percentile(99)}
+
+
+class MetricsHub:
+    """Get-or-create registry of named metrics + per-epoch snapshots.
+
+    A name is bound to ONE type for the lifetime of the hub: asking for
+    `counter("x")` after `gauge("x")` raises instead of shadowing."""
+
+    def __init__(self):
+        self._metrics: Dict[str, object] = {}
+        self.epochs: List[Dict] = []
+        self._epoch_mark: Dict[str, int] = {}
+
+    def _get(self, name: str, cls):
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls(name)
+        elif not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} is {type(m).__name__}, "
+                            f"requested {cls.__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    # -- snapshots ----------------------------------------------------------
+    def snapshot(self) -> Dict:
+        """Current value of every metric (histograms summarized)."""
+        out = {}
+        for name, m in sorted(self._metrics.items()):
+            out[name] = m.summary() if isinstance(m, Histogram) \
+                else m.value
+        return out
+
+    def mark_epoch(self, epoch: int) -> Dict:
+        """Close the per-epoch window: counter DELTAS since the previous
+        mark, current gauges, and histogram summaries. Appends (and
+        returns) the entry on `self.epochs`."""
+        entry: Dict = {"epoch": int(epoch)}
+        for name, m in sorted(self._metrics.items()):
+            if isinstance(m, Counter):
+                entry[name] = m.value - self._epoch_mark.get(name, 0)
+                self._epoch_mark[name] = m.value
+            elif isinstance(m, Gauge):
+                entry[name] = m.value
+            else:
+                entry[name] = m.summary()
+        self.epochs.append(entry)
+        return entry
+
+    def export(self, extra: Optional[Dict] = None) -> Dict:
+        """Versioned JSONL/BENCH-ready export of the whole hub."""
+        out = {"schema": OBS_SCHEMA_VERSION, "meta": run_metadata(),
+               "metrics": self.snapshot(), "epochs": list(self.epochs)}
+        if extra:
+            out.update(extra)
+        return out

@@ -1,0 +1,287 @@
+"""Structured span tracing for the GNN training stack (`repro.obs`).
+
+Every instrumented subsystem (batch builder, producer thread, trainer
+step loop, checkpointing, cache refill) emits *spans* — named wall-clock
+intervals tagged with a category and free-form args — into one global
+`Tracer`. The on-disk format is Chrome-trace/Perfetto-compatible JSONL:
+one JSON event object per line, each a complete-duration ("ph": "X") or
+instant ("ph": "i") event with microsecond timestamps and real
+pid/tid, so a trace answers "what was the producer thread doing while
+the train step stalled?" by inspection. `python -m repro.obs` converts
+a trace to the `{"traceEvents": [...]}` wrapper ui.perfetto.dev opens
+directly, and computes overlap/stall reports from it (`obs/report.py`).
+
+Span taxonomy (categories):
+
+  step      consumer train-step dispatch (`GNNTrainer._train_one`)
+  build     fused device batch build / epoch-order refresh
+            (`pipeline.builder`)
+  producer  the async producer thread's build loop
+            (`pipeline.prefetch._produce`)
+  wait      blocked time: consumer queue get, producer queue put
+  sync      host<->device synchronization points (epoch-boundary flush,
+            guard skip-counter sync, cache-refill churn sync,
+            checkpoint save) — the analyzer gates that NONE of these
+            occur mid-epoch
+  device    accumulated device step timing (`DeviceStepTimer`)
+  cache     dynamic-cache CLOCK refill dispatch
+  ckpt      checkpoint restore / rollback
+  loop      epoch envelope (`run_epoch`)
+  eval      evaluation pass
+
+Zero-cost when disabled: the module-level tracer defaults to None and
+`span()`/`instant()` return a shared no-op context manager without
+allocating — the hot path pays one global read and one `is None` test.
+Tracing never syncs the device and never touches RNG or batch data, so
+the loss trajectory is bit-identical with tracing on vs off (pinned by
+tests/test_obs.py).
+
+Device step timing — sync-free by construction: the trainer cannot time
+individual device steps without a per-step `block_until_ready` (exactly
+what the `no-host-sync-in-hot-path` lint forbids). Instead
+`DeviceStepTimer.note` accumulates per-step host dispatch timestamps
+(plus a handle on the step's un-synced output array), and `flush` —
+called only at the EXISTING epoch/checkpoint boundary syncs, after the
+boundary's own `block_until_ready` has drained the device — closes the
+accumulated window into one "device_steps" span with per-step mean
+duration in its args. No new boundary syncs, no mid-epoch syncs; the
+jaxpr audit and lint stay clean because the timer never calls a sync
+primitive itself.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+TRACE_SCHEMA_VERSION = 1
+
+# required keys of every emitted event; "X" events additionally carry
+# "dur" — the conformance contract tests/test_obs.py pins
+EVENT_KEYS = ("name", "cat", "ph", "ts", "pid", "tid")
+
+
+def _now_us() -> float:
+    return time.perf_counter_ns() / 1e3
+
+
+class _Span:
+    """One in-flight "X" (complete) event; also the reusable context
+    manager `Tracer.span` returns."""
+    __slots__ = ("_tracer", "_ev", "_t0")
+
+    def __init__(self, tracer: "Tracer", name: str, cat: str,
+                 args: Dict[str, Any]):
+        self._tracer = tracer
+        self._ev = {"name": name, "cat": cat, "ph": "X", "pid": tracer.pid,
+                    "tid": threading.get_ident(), "args": args}
+        self._t0 = 0.0
+
+    def set(self, **args) -> "_Span":
+        """Attach args discovered mid-span (e.g. a result count)."""
+        self._ev["args"].update(args)
+        return self
+
+    def __enter__(self) -> "_Span":
+        self._t0 = _now_us()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        ev = self._ev
+        ev["ts"] = self._t0
+        ev["dur"] = _now_us() - self._t0
+        self._tracer._emit(ev)
+
+
+class _NoopSpan:
+    """Shared do-nothing span: what `span()` hands out when tracing is
+    disabled. Stateless, hence safe to share across threads/reentries."""
+    __slots__ = ()
+
+    def set(self, **args) -> "_NoopSpan":
+        return self
+
+    def __enter__(self) -> "_NoopSpan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+
+NOOP = _NoopSpan()
+
+
+class Tracer:
+    """Buffered, thread-safe span collector writing Chrome-trace JSONL.
+
+    `path=None` keeps events in memory only (tests, ad-hoc analysis —
+    read them back with `events()`); with a path, `flush()`/`close()`
+    append the buffered events one JSON object per line. Timestamps are
+    microseconds from `perf_counter_ns` (monotonic, sub-us resolution);
+    pid/tid are the real process/thread ids so multi-thread traces lay
+    out one Perfetto track per thread.
+    """
+
+    def __init__(self, path: Optional[str] = None,
+                 meta: Optional[Dict[str, Any]] = None):
+        self.path = path
+        self.pid = os.getpid()
+        self.meta = dict(meta or {})
+        self._lock = threading.Lock()
+        self._buf: List[dict] = []
+        self._all: List[dict] = []
+        if path:
+            d = os.path.dirname(path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            # truncate + header: process metadata rides as an "M" event
+            with open(path, "w") as f:
+                f.write(json.dumps(self._meta_event()) + "\n")
+
+    def _meta_event(self) -> dict:
+        return {"name": "process_name", "cat": "__metadata", "ph": "M",
+                "ts": 0, "pid": self.pid, "tid": 0,
+                "args": dict(self.meta,
+                             schema_version=TRACE_SCHEMA_VERSION)}
+
+    # -- emission -----------------------------------------------------------
+    def _emit(self, ev: dict) -> None:
+        with self._lock:
+            self._buf.append(ev)
+            self._all.append(ev)
+
+    def span(self, name: str, cat: str = "host", **args) -> _Span:
+        return _Span(self, name, cat, args)
+
+    def instant(self, name: str, cat: str = "host", **args) -> None:
+        self._emit({"name": name, "cat": cat, "ph": "i", "ts": _now_us(),
+                    "pid": self.pid, "tid": threading.get_ident(),
+                    "s": "t", "args": args})
+
+    # -- inspection / persistence -------------------------------------------
+    def events(self) -> List[dict]:
+        """All events emitted so far (including already-flushed ones),
+        metadata header excluded."""
+        with self._lock:
+            return list(self._all)
+
+    def flush(self) -> None:
+        with self._lock:
+            buf, self._buf = self._buf, []
+        if self.path and buf:
+            with open(self.path, "a") as f:
+                for ev in buf:
+                    f.write(json.dumps(ev) + "\n")
+
+    def close(self) -> None:
+        self.flush()
+
+
+# ---------------------------------------------------------------------------
+# global tracer: the stack's call sites go through these free functions
+# ---------------------------------------------------------------------------
+_TRACER: Optional[Tracer] = None
+
+
+def install(tracer: Tracer) -> Tracer:
+    """Make `tracer` the stack-wide tracer (visible from every thread)."""
+    global _TRACER
+    _TRACER = tracer
+    return tracer
+
+
+def uninstall() -> Optional[Tracer]:
+    """Disable tracing; returns (and flushes) the previous tracer."""
+    global _TRACER
+    t, _TRACER = _TRACER, None
+    if t is not None:
+        t.flush()
+    return t
+
+
+def current() -> Optional[Tracer]:
+    return _TRACER
+
+
+class enabled:
+    """`with trace.enabled("t.jsonl") as t:` — install for the block."""
+
+    def __init__(self, path: Optional[str] = None, **meta):
+        self.tracer = Tracer(path, meta=meta)
+
+    def __enter__(self) -> Tracer:
+        return install(self.tracer)
+
+    def __exit__(self, *exc) -> None:
+        if _TRACER is self.tracer:
+            uninstall()
+        else:                       # someone swapped tracers mid-block
+            self.tracer.flush()
+
+
+def span(name: str, cat: str = "host", **args):
+    """A span on the installed tracer, or the shared no-op when tracing
+    is disabled — the ONE line hot paths pay."""
+    t = _TRACER
+    if t is None:
+        return NOOP
+    return t.span(name, cat, **args)
+
+
+def instant(name: str, cat: str = "host", **args) -> None:
+    t = _TRACER
+    if t is not None:
+        t.instant(name, cat, **args)
+
+
+# ---------------------------------------------------------------------------
+# sync-free device step timing
+# ---------------------------------------------------------------------------
+class DeviceStepTimer:
+    """Accumulate per-step dispatch timestamps; close the window ONLY at
+    an existing boundary sync.
+
+    `note(out)` is called once per train step right after dispatch: it
+    records the host timestamp and keeps a reference to the step's
+    un-synced output array (a scalar — holding it is free and keeps the
+    dispatch chain alive for the boundary drain). NO sync happens here.
+
+    `flush(site=...)` is called immediately AFTER the caller's own
+    boundary `block_until_ready` (epoch flush, n-step drain, checkpoint)
+    and emits one "device_steps" span covering first-dispatch -> drained,
+    with `n` steps and the derived per-step mean in its args. The timer
+    itself never calls a sync primitive — the boundary sync it rides is
+    one the trainer already performs, so enabling tracing adds zero
+    host<->device round-trips (the `no-host-sync-in-hot-path` contract).
+    """
+
+    def __init__(self):
+        self._t0: Optional[float] = None
+        self._n = 0
+        self._last = None           # un-synced output of the latest step
+
+    def note(self, out: Any = None) -> None:
+        if _TRACER is None:
+            return
+        if self._t0 is None:
+            self._t0 = _now_us()
+        self._n += 1
+        self._last = out
+
+    def flush(self, site: str = "epoch") -> None:
+        """Emit the accumulated window (call AFTER the boundary drain)."""
+        t = _TRACER
+        if t is None or self._t0 is None:
+            self._t0, self._n, self._last = None, 0, None
+            return
+        end = _now_us()
+        dur = end - self._t0
+        n = self._n
+        t._emit({"name": "device_steps", "cat": "device", "ph": "X",
+                 "ts": self._t0, "dur": dur, "pid": t.pid,
+                 "tid": threading.get_ident(),
+                 "args": {"n": n, "site": site,
+                          "per_step_us": dur / max(n, 1)}})
+        self._t0, self._n, self._last = None, 0, None

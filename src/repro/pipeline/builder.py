@@ -40,6 +40,7 @@ from repro import sampling
 from repro.batching.policy import as_policy
 from repro.core import minibatch as mb
 from repro.graphs.csr import DeviceGraph, Graph
+from repro.obs import trace as obs_trace
 from repro.pipeline.device_order import (OrderSpec, device_epoch_order,
                                          epoch_words_for)
 from repro.resilience import faults
@@ -134,6 +135,10 @@ class DeviceBatchBuilder:
         -1 padded (cached; recomputed once per epoch)."""
         if self._order_cache[0] == epoch:
             return self._order_cache[1]
+        with obs_trace.span("epoch_order", cat="build", epoch=epoch):
+            return self._epoch_roots_fresh(epoch)
+
+    def _epoch_roots_fresh(self, epoch: int) -> jnp.ndarray:
         if self.spec is not None:
             order = device_epoch_order(
                 self.spec, epoch_words_for(self.seed, epoch))
@@ -173,11 +178,14 @@ class DeviceBatchBuilder:
         # producer thread, which the consumer watchdog must absorb by
         # restarting from the same cursor (bit-exact, builds are pure)
         faults.maybe_raise("batch_build", epoch=epoch, pos=pos)
-        return _fused_build(
-            self._seed_key, jnp.asarray(epoch, jnp.int32),
-            jnp.asarray(pos, jnp.int32), self.g, self.epoch_roots(epoch),
-            self.labels, self.epoch_ranks(epoch), self.batch_size,
-            self.fanouts, self.caps, self.sampler)
+        with obs_trace.span("batch_build", cat="build",
+                            epoch=epoch, pos=pos):
+            return _fused_build(
+                self._seed_key, jnp.asarray(epoch, jnp.int32),
+                jnp.asarray(pos, jnp.int32), self.g,
+                self.epoch_roots(epoch), self.labels,
+                self.epoch_ranks(epoch), self.batch_size,
+                self.fanouts, self.caps, self.sampler)
 
 
 # ---------------------------------------------------------------------------

@@ -53,6 +53,7 @@ import time
 
 from repro.batching.stream import BatchStream
 from repro.core import minibatch as mb
+from repro.obs import trace as obs_trace
 from repro.pipeline.builder import DeviceBatchBuilder
 from repro.resilience import faults
 
@@ -114,15 +115,22 @@ class AsyncBatchStream(BatchStream):
                     while gen == self._gen and not self._stop.is_set():
                         time.sleep(_POLL_S)
                     return
-                batch = self.builder.build(epoch, pos)
-                while gen == self._gen and not self._stop.is_set():
-                    # analysis: allow[no-wall-clock] -- watchdog heartbeat: liveness only, never influences delivered batch data
-                    self._beat = time.monotonic()   # full queue is healthy
-                    try:
-                        q.put((epoch, pos, batch), timeout=_POLL_S)
-                        break
-                    except queue.Full:
-                        continue
+                # cat="producer": these spans live on the producer thread;
+                # their wall-clock intersection with consumer cat="step"
+                # spans IS the measured prefetch overlap (obs.report)
+                with obs_trace.span("producer_build", cat="producer",
+                                    epoch=epoch, pos=pos):
+                    batch = self.builder.build(epoch, pos)
+                with obs_trace.span("queue_put_wait", cat="wait",
+                                    epoch=epoch, pos=pos):
+                    while gen == self._gen and not self._stop.is_set():
+                        # analysis: allow[no-wall-clock] -- watchdog heartbeat: liveness only, never influences delivered batch data
+                        self._beat = time.monotonic()  # full queue: healthy
+                        try:
+                            q.put((epoch, pos, batch), timeout=_POLL_S)
+                            break
+                        except queue.Full:
+                            continue
                 epoch, pos = self._advance(epoch, pos)
         except BaseException as exc:    # surface build errors to consumer
             # stash the real exception (with traceback) BEFORE attempting
@@ -180,28 +188,33 @@ class AsyncBatchStream(BatchStream):
             # it falls through to the loop below so the restart goes
             # through `_recover` (metered, backed off, budgeted).
             self._restart(epoch, pos)
-        while True:
-            q = self._queue
-            try:
-                item = q.get(timeout=_POLL_S)
-            except queue.Empty:
-                if self._thread is None or not self._thread.is_alive():
-                    self._recover(epoch, pos, self._exc or RuntimeError(
-                        "AsyncBatchStream producer died without output"))
-                elif self._stalled():
-                    self._recover(epoch, pos, RuntimeError(
-                        f"AsyncBatchStream producer heartbeat stalled "
-                        f"> {self.stall_timeout_s}s at {(epoch, pos)}"))
-                continue
-            if item[0] == "error":
-                self._recover(epoch, pos, item[1])
-                continue
-            e, p, batch = item
-            if (e, p) != (epoch, pos):      # stale pre-restart leftover
-                continue
-            self._consec_restarts = 0       # healthy delivery resets budget
-            self._next_out = self._advance(epoch, pos)
-            return batch
+        # cat="wait": total time the CONSUMER blocked before this batch
+        # came off the queue — the "consumer starved" stall site in the
+        # analyzer (its mirror, queue_put_wait, is healthy backpressure)
+        with obs_trace.span("queue_get_wait", cat="wait",
+                            epoch=epoch, pos=pos):
+            while True:
+                q = self._queue
+                try:
+                    item = q.get(timeout=_POLL_S)
+                except queue.Empty:
+                    if self._thread is None or not self._thread.is_alive():
+                        self._recover(epoch, pos, self._exc or RuntimeError(
+                            "AsyncBatchStream producer died without output"))
+                    elif self._stalled():
+                        self._recover(epoch, pos, RuntimeError(
+                            f"AsyncBatchStream producer heartbeat stalled "
+                            f"> {self.stall_timeout_s}s at {(epoch, pos)}"))
+                    continue
+                if item[0] == "error":
+                    self._recover(epoch, pos, item[1])
+                    continue
+                e, p, batch = item
+                if (e, p) != (epoch, pos):  # stale pre-restart leftover
+                    continue
+                self._consec_restarts = 0   # healthy delivery resets budget
+                self._next_out = self._advance(epoch, pos)
+                return batch
 
     def prime(self) -> "AsyncBatchStream":
         """Compile the fused build path synchronously (one throwaway

@@ -34,6 +34,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.resilience import faults
 
 
@@ -71,6 +72,14 @@ def _step_dirs(ckpt_dir: str) -> List[Tuple[int, str]]:
 def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None,
          keep: int = 3) -> str:
     """Atomically write `tree` (+ JSON-able `extra`) as step `step`."""
+    # cat="sync": np.asarray below drains every device leaf to host —
+    # this is one of the trainer's sanctioned boundary syncs
+    with obs_trace.span("ckpt_save", cat="sync", step=step):
+        return _save(ckpt_dir, step, tree, extra, keep)
+
+
+def _save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict],
+          keep: int) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves, paths, _ = _flatten_with_paths(tree)
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_save_")
@@ -125,6 +134,11 @@ def restore(ckpt_dir: str, step: int, like: Any,
     `CheckpointCorrupt` instead of returning silently wrong state. If
     `shardings` is given each leaf is device_put with its sharding (the
     elastic reshard happens here)."""
+    with obs_trace.span("ckpt_restore", cat="ckpt", step=step):
+        return _restore(ckpt_dir, step, like, shardings)
+
+
+def _restore(ckpt_dir: str, step: int, like: Any, shardings: Any) -> tuple:
     path = os.path.join(ckpt_dir, f"step_{step:09d}")
     try:
         with open(os.path.join(path, "manifest.json")) as f:

@@ -61,6 +61,8 @@ import numpy as np
 from repro import featcache, sampling
 from repro.featcache import dynamic as featcache_dynamic
 from repro.featcache.dynamic import DynamicCacheState
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import MetricsHub
 from repro.batching import (BatchStream, CapsCalibrator, Cursor, as_policy,
                             eval_batches, make_policy)
 from repro.configs.base import GNNConfig, TrainConfig
@@ -75,7 +77,7 @@ from repro.resilience.guard import as_guard
 from repro.train import checkpoint as ckpt
 from repro.train.losses import accuracy, gnn_softmax_ce
 from repro.train.monitor import (HitRateMeter, ResilienceMeter, StepFailure,
-                                 resilient_step)
+                                 StragglerMonitor, resilient_step)
 
 
 @dataclass
@@ -88,6 +90,7 @@ class EpochMetrics:
     mean_unique_nodes: float
     cache_hit_rate: float = 0.0     # measured (repro.featcache); 0 = no cache
     cache_refills: int = 0          # dynamic-CLOCK rows admitted (churn)
+    straggler_fraction: float = 0.0  # slow-step fraction of THIS epoch
 
 
 @dataclass
@@ -105,6 +108,7 @@ class TrainResult:
     cache: str = ""                 # cache describe(), "" = uncached
     cache_hit_rate: float = 0.0     # measured over the whole run
     cache_refills: int = 0          # total dynamic-CLOCK churn of the run
+    straggler_fraction: float = 0.0  # slow-step fraction of the whole run
 
 
 def _batch_cache_stats(cache, batch: mb.MiniBatch):
@@ -219,13 +223,25 @@ class GNNTrainer:
             cache, graph, capacity=cache_capacity, frac=cache_frac,
             policy=self.policy, batch_size=tcfg.batch_size,
             fanouts=self.fanouts, seed=seed)
-        self.cache_meter = HitRateMeter()
+        # one metrics registry for the whole run (repro.obs): the three
+        # meters below mirror every mutation into it, and `hub.export()`
+        # is the versioned runtime-metrics artifact of this trainer
+        self.hub = MetricsHub()
+        self.cache_meter = HitRateMeter(hub=self.hub)
         self._pending_stats = []      # device counters, synced per epoch
+        # per-step dispatch-time outlier tracking (host wall clock only —
+        # no sync; observed on every `_train_one` dispatch), surfaced as
+        # `EpochMetrics.straggler_fraction` + the "straggler/*" hub series
+        self.straggler = StragglerMonitor(hub=self.hub)
+        # sync-free device step timing (repro.obs): per-step dispatch
+        # timestamps accumulate and flush into one "device_steps" trace
+        # span ONLY at the existing epoch/n-step boundary drains
+        self._dev_timer = obs_trace.DeviceStepTimer()
         # guarded execution (repro.resilience): None/False disables (the
         # in-jit guard still runs but is never synced or escalated),
         # True = GuardConfig() defaults, or an explicit GuardConfig
         self.guard = as_guard(guard)
-        self.guard_meter = ResilienceMeter()
+        self.guard_meter = ResilienceMeter(hub=self.hub)
         self._skips = jnp.zeros((), jnp.int32)   # device skip counter
         self._skips_host = 0          # last synced value (guard checks)
         self._pending_ok = []         # (ok, step) device flags, per flush
@@ -342,39 +358,53 @@ class GNNTrainer:
         self.stream.cache = cache
 
     def _train_one(self, batch: mb.MiniBatch, lr: float):
-        poison = 1.0
-        if faults.fire("step_nonfinite", step=self.global_step) is not None:
-            # chaos site: NaN the loss inside the jitted step — python
-            # floats are weak-typed scalars, so 1.0 vs nan never retraces
-            poison = float("nan")
-        self.params, self.opt_state, loss, ok, self._skips, hits, misses, \
-            refs = self.train_step(
-                self.params, self.opt_state, batch, self.feats,
-                self.degrees, lr, self._dropout_key(), self.cache,
-                poison, self._skips)
-        if self.cache is not None:
-            # keep the device counters un-synced: a float()/int() here
-            # would serialize away the stream's prefetch overlap
-            self._pending_stats.append((hits, misses))
-        if self.guard is not None:
-            self._pending_ok.append((ok, self.global_step))
-        if refs is not None:
-            self._set_cache(featcache_dynamic.with_refs(self.cache, refs))
-        self.global_step += 1
-        # a checkpoint due at this step forces a guard sync first: we must
-        # NEVER checkpoint mid-skip-burst, or a later rollback to that
-        # checkpoint would permanently lose the skipped batches (the
-        # replayed trajectory could not bit-match a clean run)
-        # analysis: allow[no-host-sync-in-hot-path] -- bool() over host ints/paths (ckpt cadence), no device operand
-        due_ckpt = bool(self.ckpt_dir and self.ckpt_every and
-                        self.global_step % self.ckpt_every == 0)
-        rolled = self._guard_check(force=due_ckpt)
-        # refill BEFORE any checkpoint at this step: a boundary checkpoint
-        # then carries the post-refill state + advanced _cache_epoch, so a
-        # resumed run neither skips nor repeats the refill
-        self._maybe_refill()
-        if due_ckpt and not rolled and self._skips_host == 0:
-            self.save()
+        t0 = time.perf_counter()
+        step0 = self.global_step
+        with obs_trace.span("train_step", cat="step", step=step0):
+            poison = 1.0
+            if faults.fire("step_nonfinite",
+                           step=self.global_step) is not None:
+                # chaos site: NaN the loss inside the jitted step — python
+                # floats are weak-typed scalars, so 1.0 vs nan never
+                # retraces
+                poison = float("nan")
+            self.params, self.opt_state, loss, ok, self._skips, hits, \
+                misses, refs = self.train_step(
+                    self.params, self.opt_state, batch, self.feats,
+                    self.degrees, lr, self._dropout_key(), self.cache,
+                    poison, self._skips)
+            # sync-free device timing: record the dispatch timestamp +
+            # the un-synced loss; the accumulated window closes at the
+            # NEXT existing boundary drain (epoch flush / n-step sync)
+            self._dev_timer.note(loss)
+            if self.cache is not None:
+                # keep the device counters un-synced: a float()/int()
+                # here would serialize away the stream's prefetch overlap
+                self._pending_stats.append((hits, misses))
+            if self.guard is not None:
+                self._pending_ok.append((ok, self.global_step))
+            if refs is not None:
+                self._set_cache(
+                    featcache_dynamic.with_refs(self.cache, refs))
+            self.global_step += 1
+            # a checkpoint due at this step forces a guard sync first: we
+            # must NEVER checkpoint mid-skip-burst, or a later rollback to
+            # that checkpoint would permanently lose the skipped batches
+            # (the replayed trajectory could not bit-match a clean run)
+            # analysis: allow[no-host-sync-in-hot-path] -- bool() over host ints/paths (ckpt cadence), no device operand
+            due_ckpt = bool(self.ckpt_dir and self.ckpt_every and
+                            self.global_step % self.ckpt_every == 0)
+            rolled = self._guard_check(force=due_ckpt)
+            # refill BEFORE any checkpoint at this step: a boundary
+            # checkpoint then carries the post-refill state + advanced
+            # _cache_epoch, so a resumed run neither skips nor repeats
+            # the refill
+            self._maybe_refill()
+            if due_ckpt and not rolled and self._skips_host == 0:
+                self.save()
+        # host dispatch time (never a device sync): a straggler here is a
+        # slow HOST — batch starvation, dispatch overhead, rollback work
+        self.straggler.observe(time.perf_counter() - t0, step0)
         return loss
 
     def _maybe_refill(self) -> None:
@@ -392,6 +422,13 @@ class GNNTrainer:
         if not (c.epoch > self._cache_epoch or
                 (c.epoch == self._cache_epoch and at_end)):
             return
+        # cat="sync": the refill's churn count + integrity check round-trip
+        # to host. It fires inside the epoch's LAST train step (so the
+        # mid-epoch-sync gate sanctions it by construction).
+        with obs_trace.span("cache_refill", cat="sync", epoch=c.epoch):
+            self._refill_now(c, at_end)
+
+    def _refill_now(self, c, at_end: bool) -> None:
         state, admitted = featcache_dynamic.refill(self.cache, self.feats)
         if not featcache_dynamic.integrity_ok(state):
             # graceful degradation: residency invariants broken (the
@@ -415,13 +452,18 @@ class GNNTrainer:
     def _flush_cache_stats(self) -> None:
         """Sync pending per-batch device flags: cache counters into the
         hit-rate meter, guard ok flags into the resilience meter."""
-        for h, m in self._pending_stats:
-            self.cache_meter.observe(h, m)
-        self._pending_stats = []
-        for ok, step in self._pending_ok:
-            if not bool(ok):
-                self.guard_meter.note("skipped_steps", step=step)
-        self._pending_ok = []
+        if not (self._pending_stats or self._pending_ok):
+            return
+        with obs_trace.span("stats_flush", cat="sync",
+                            n=(len(self._pending_stats) +
+                               len(self._pending_ok))):
+            for h, m in self._pending_stats:
+                self.cache_meter.observe(h, m)
+            self._pending_stats = []
+            for ok, step in self._pending_ok:
+                if not bool(ok):
+                    self.guard_meter.note("skipped_steps", step=step)
+            self._pending_ok = []
 
     # -- guarded execution (repro.resilience) -------------------------------
     def _guard_check(self, force: bool = False) -> bool:
@@ -434,8 +476,10 @@ class GNNTrainer:
         if not (force or (g.check_every > 0 and
                           self.global_step % g.check_every == 0)):
             return False
-        # analysis: allow[no-host-sync-in-hot-path] -- THE one guard sync, amortized by check_every cadence (see GuardConfig)
-        self._skips_host = int(self._skips)     # the one guard sync
+        with obs_trace.span("guard_sync", cat="sync",
+                            step=self.global_step):
+            # analysis: allow[no-host-sync-in-hot-path] -- THE one guard sync, amortized by check_every cadence (see GuardConfig)
+            self._skips_host = int(self._skips)  # the one guard sync
         if self._skips_host <= g.max_consecutive_skips:
             return False
         self._escalate()
@@ -472,9 +516,12 @@ class GNNTrainer:
                     f"{self.ckpt_dir}")
             return step, tree, extra
 
-        (step, tree, extra), _ = resilient_step(
-            _restore, max_retries=1, backoff_s=0.05)
-        self._apply_restored(step, tree, extra)
+        with obs_trace.span("ckpt_rollback", cat="ckpt",
+                            step=self.global_step,
+                            skips=self._skips_host):
+            (step, tree, extra), _ = resilient_step(
+                _restore, max_retries=1, backoff_s=0.05)
+            self._apply_restored(step, tree, extra)
         self._skips = jnp.zeros((), jnp.int32)
         self._skips_host = 0
         self._pending_stats = []
@@ -485,20 +532,33 @@ class GNNTrainer:
         epoch-boundary refill fires inside `_train_one` at the last
         batch, so the dynamic cache is already post-refill on return)."""
         t0 = time.perf_counter()
+        e0 = self.stream.cursor.epoch
         mark = self.cache_meter.mark()
+        smark = self.straggler.mark()
         losses, uniq = [], []
-        for batch in self.stream.epoch():
-            losses.append(self._train_one(batch, lr))
-            uniq.append(batch.num_unique)
-        if losses:
-            # analysis: allow[no-host-sync-in-hot-path] -- epoch-boundary flush: one drain per epoch so `time` covers real device work
-            jax.block_until_ready(losses[-1])
-        dt = time.perf_counter() - t0
-        self._flush_cache_stats()
-        self._guard_check(force=True)   # epoch boundary: exact skip state
+        # the epoch envelope span is what the trace analyzer's mid-epoch
+        # sync gate anchors on: every cat="sync" span starting inside it
+        # before the final train step fails `--forbid-mid-epoch-sync`
+        with obs_trace.span("epoch", cat="loop", epoch=e0):
+            for batch in self.stream.epoch():
+                losses.append(self._train_one(batch, lr))
+                uniq.append(batch.num_unique)
+            if losses:
+                with obs_trace.span("epoch_flush", cat="sync", epoch=e0,
+                                    n_steps=len(losses)):
+                    # analysis: allow[no-host-sync-in-hot-path] -- epoch-boundary flush: one drain per epoch so `time` covers real device work
+                    jax.block_until_ready(losses[-1])
+                # the device window closes only AFTER the drain above —
+                # the timer itself never syncs
+                self._dev_timer.flush("epoch")
+            dt = time.perf_counter() - t0
+            self._flush_cache_stats()
+            self._guard_check(force=True)  # epoch boundary: exact skips
+        self.hub.mark_epoch(e0)
         if not losses:          # resumed exactly on an epoch boundary
             return {"loss": 0.0, "time": dt, "uniq": 0.0,
-                    "cache_hit": 0.0, "cache_refill": 0}
+                    "cache_hit": 0.0, "cache_refill": 0,
+                    "straggler": 0.0}
         ep = self.cache_meter.note_epoch(mark) if self.cache is not None \
             else {"hit_rate": 0.0, "refills": 0}
         # analysis: allow[no-host-sync-in-hot-path] -- post-flush metric reduction at the epoch boundary; device is already drained
@@ -507,7 +567,8 @@ class GNNTrainer:
                 # analysis: allow[no-host-sync-in-hot-path] -- post-flush metric reduction at the epoch boundary; device is already drained
                 "uniq": float(np.mean([float(u) for u in uniq])),
                 "cache_hit": ep["hit_rate"],
-                "cache_refill": ep["refills"]}
+                "cache_refill": ep["refills"],
+                "straggler": self.straggler.fraction_since(smark)}
 
     def train_steps(self, n: int, lr: Optional[float] = None) -> List[float]:
         """Consume exactly `n` batches (crossing epoch boundaries)."""
@@ -518,10 +579,17 @@ class GNNTrainer:
         losses = [self._train_one(next(it), lr) for _ in range(n)]
         self._flush_cache_stats()
         self._guard_check(force=True)
-        # analysis: allow[no-host-sync-in-hot-path] -- single batched sync at the END of the n-step run (see comment above: no per-step float)
-        return [float(l) for l in losses]
+        with obs_trace.span("steps_flush", cat="sync", n=n):
+            # analysis: allow[no-host-sync-in-hot-path] -- single batched sync at the END of the n-step run (see comment above: no per-step float)
+            out = [float(l) for l in losses]
+        self._dev_timer.flush("train_steps")
+        return out
 
     def evaluate(self, ids: np.ndarray) -> Dict:
+        with obs_trace.span("eval", cat="eval", n_ids=len(ids)):
+            return self._evaluate(ids)
+
+    def _evaluate(self, ids: np.ndarray) -> Dict:
         tot_l, tot_a, tot_n = 0.0, 0.0, 0.0
         for batch in eval_batches(
                 self.graph, ids, self.tcfg.batch_size, self.fanouts,
@@ -567,7 +635,8 @@ class GNNTrainer:
             history.append(EpochMetrics(epoch, em["loss"], ev["loss"],
                                         ev["acc"], em["time"], em["uniq"],
                                         em["cache_hit"],
-                                        em["cache_refill"]))
+                                        em["cache_refill"],
+                                        em["straggler"]))
             if verbose:
                 print(f"  epoch {epoch:3d} loss={em['loss']:.4f} "
                       f"val={ev['acc']:.4f} t={em['time']:.2f}s "
@@ -614,6 +683,7 @@ class GNNTrainer:
             cache=self.cache.describe() if self.cache is not None else "",
             cache_hit_rate=self.cache_meter.hit_rate,
             cache_refills=self.cache_meter.refills,
+            straggler_fraction=self.straggler.straggler_fraction,
         )
 
 

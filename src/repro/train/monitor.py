@@ -13,6 +13,14 @@ actions the guarded GNN path takes (skipped non-finite steps, rollbacks,
 producer watchdog restarts, corrupt-checkpoint fallbacks, cache
 degradations) so chaos runs (`repro.resilience`) can assert that the
 expected recovery — and ONLY the expected recovery — happened.
+
+All three meters keep their standalone behaviour but accept an optional
+`hub=` (`repro.obs.MetricsHub`): when attached, every mutation mirrors
+into canonically named hub series ("cache/hits",
+"resilience/rollbacks", "straggler/fraction", ...) so one registry
+exports the whole stack's runtime metrics. The mirror is exact — hub
+counters equal the meter's own fields at every point, pinned by
+tests/test_obs.py's absorption-equivalence tests.
 """
 from __future__ import annotations
 
@@ -30,23 +38,46 @@ class StragglerMonitor:
     ema: float = 0.0
     count: int = 0
     events: List[dict] = field(default_factory=list)
+    hub: Optional[object] = None      # repro.obs.MetricsHub mirror
 
     def observe(self, dt: float, step: int) -> bool:
         self.count += 1
         if self.count <= self.warmup:
             self.ema = dt if self.ema == 0 else \
                 (self.alpha * dt + (1 - self.alpha) * self.ema)
+            self._mirror(dt, False)
             return False
         slow = dt > self.threshold * self.ema
         if slow:
             self.events.append({"step": step, "dt": dt, "ema": self.ema})
         else:
             self.ema = self.alpha * dt + (1 - self.alpha) * self.ema
+        self._mirror(dt, slow)
         return slow
+
+    def _mirror(self, dt: float, slow: bool) -> None:
+        if self.hub is None:
+            return
+        self.hub.counter("straggler/steps").inc()
+        if slow:
+            self.hub.counter("straggler/events").inc()
+        self.hub.histogram("straggler/step_time_s").observe(dt)
+        self.hub.gauge("straggler/fraction").set(self.straggler_fraction)
 
     @property
     def straggler_fraction(self) -> float:
         return len(self.events) / max(self.count - self.warmup, 1)
+
+    def mark(self) -> tuple:
+        """Window marker for per-epoch fractions (`fraction_since`)."""
+        return (len(self.events), self.count)
+
+    def fraction_since(self, mark: tuple) -> float:
+        """Straggler fraction of the window opened at `mark` (observed
+        steps only; the warmup steps burn off in the first window)."""
+        ev0, n0 = mark
+        denom = self.count - max(n0, self.warmup)
+        return (len(self.events) - ev0) / max(denom, 1)
 
 
 @dataclass
@@ -67,14 +98,21 @@ class HitRateMeter:
     refills: int = 0                  # admitted rows, all epochs (churn)
     degraded_at: Optional[int] = None  # step the cache was dropped, if any
     trajectory: List[dict] = field(default_factory=list)
+    hub: Optional[object] = None      # repro.obs.MetricsHub mirror
 
     def observe(self, hits, misses) -> None:
         self.hits += int(hits)
         self.misses += int(misses)
+        if self.hub is not None:
+            self.hub.counter("cache/hits").inc(int(hits))
+            self.hub.counter("cache/misses").inc(int(misses))
+            self.hub.gauge("cache/hit_rate").set(self.hit_rate)
 
     def observe_refill(self, admitted) -> None:
         """Count one epoch boundary's refill churn (admitted rows)."""
         self.refills += int(admitted)
+        if self.hub is not None:
+            self.hub.counter("cache/refills").inc(int(admitted))
 
     def note_degraded(self, step: int) -> None:
         """Record that the trainer dropped a corrupt cache and fell back
@@ -82,6 +120,8 @@ class HitRateMeter:
         keeps a visible marker, hit counting simply stops)."""
         self.degraded_at = step
         self.trajectory.append({"degraded": True, "step": step})
+        if self.hub is not None:
+            self.hub.counter("cache/degradations").inc()
 
     @property
     def total(self) -> int:
@@ -123,6 +163,7 @@ class ResilienceMeter:
     ckpt_fallbacks: int = 0           # corrupt checkpoints skipped over
     cache_degradations: int = 0       # dynamic cache dropped to uncached
     events: List[dict] = field(default_factory=list)
+    hub: Optional[object] = None      # repro.obs.MetricsHub mirror
 
     _KINDS = ("skipped_steps", "rollbacks", "producer_restarts",
               "ckpt_fallbacks", "cache_degradations")
@@ -133,6 +174,8 @@ class ResilienceMeter:
                              f"known: {self._KINDS}")
         setattr(self, kind, getattr(self, kind) + 1)
         self.events.append({"kind": kind, **info})
+        if self.hub is not None:
+            self.hub.counter(f"resilience/{kind}").inc()
 
     def counts(self) -> dict:
         return {k: getattr(self, k) for k in self._KINDS}
