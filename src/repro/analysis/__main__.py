@@ -84,7 +84,7 @@ def main(argv=None) -> int:
         report["jaxpr"] = audit
         jaxpr_ok = bool(audit["ok"])
         for section in ("donation", "kernels", "device_order",
-                        "fused_build", "train_step"):
+                        "fused_build", "train_step", "sharded_step"):
             print(f"jaxpr: {section:12s} "
                   f"{'ok' if audit[section]['ok'] else 'FAIL'}")
 

@@ -378,6 +378,83 @@ def audit_train_step(graph) -> dict:
     return rep
 
 
+def _make_sharded_trainer(graph, mesh, *, seed: int = 3):
+    from repro.batching.policy import make_policy
+    from repro.configs.base import GNNConfig, TrainConfig
+    from repro.train.gnn_loop import GNNTrainer
+    cfg = GNNConfig("sage-audit", "sage", 2, 16, graph.feat_dim,
+                    graph.num_classes, fanout=(5, 5))
+    tcfg = TrainConfig(batch_size=128, max_epochs=1)
+    # a STATIC cache plan rides along (the richest sharded path: cache
+    # hits short-circuit the halo exchange inside the same jaxpr)
+    return GNNTrainer(graph, cfg, tcfg, make_policy("comm_rand"),
+                      caps=(512, 1024), eval_caps=(512, 1024), seed=seed,
+                      cache="degree_hot", mesh=mesh)
+
+
+def _trace_sharded_step(tr, epoch: int, pos: int, *, poison: float = 1.0,
+                        lr: float = 1e-3, key_seed: int = 0):
+    """Trace the shard_map-wrapped per-replica step exactly as the
+    trainer dispatches it: batch from the sharded stream, the dropout
+    key as raw key_data, poison/lr as weak-typed python scalars."""
+    batch = tr.stream.build(tr.stream.root_batches(epoch)[pos], epoch, pos)
+    step = tr._sharded_step_for(epoch)
+    return jax.make_jaxpr(step.mapped)(
+        tr.params, tr.opt_state, batch, tr._train_feats, tr.degrees, lr,
+        jax.random.key_data(jax.random.key(key_seed)), tr.cache, poison,
+        tr._skips)
+
+
+def audit_sharded_step(graph, *, n_devices: int = 1) -> dict:
+    """The `repro.dist.gnn` data-parallel step under the same contract
+    as the single-device one: no callbacks, no f64, donation annotated,
+    and ONE jaxpr hash across (poison, lr/key, batch index, fresh
+    trainer = resume). Replica-index stability holds by construction —
+    the step is a single SPMD program; `lax.axis_index` is a traced
+    collective, so no per-replica trace exists to diverge — and the
+    hash check on a fresh trainer pins that the HaloPlan (the only
+    static input) replans identically.
+
+    The sharded layer 0 consumes a halo-gathered (cap_L, F) table, so
+    the single-device audit's no-feature-gather check does NOT apply
+    here: table gathers from the (Ns, F) local shard are the exchange
+    itself, not a kernel fallback."""
+    from repro.dist import gnn as dist_gnn
+    mesh = dist_gnn.make_gnn_mesh(n_devices)
+    tr = _make_sharded_trainer(graph, mesh)
+    closed = _trace_sharded_step(tr, 0, 0)
+    hashes = [jaxpr_hash(closed),
+              jaxpr_hash(_trace_sharded_step(tr, 0, 0,
+                                             poison=float("nan"))),
+              jaxpr_hash(_trace_sharded_step(tr, 0, 0, lr=3e-4,
+                                             key_seed=5)),
+              jaxpr_hash(_trace_sharded_step(tr, 0, 1))]
+    tr2 = _make_sharded_trainer(graph, mesh)            # resume: rebuilt
+    hashes.append(jaxpr_hash(_trace_sharded_step(tr2, 0, 0)))
+
+    rep = _hygiene(closed)
+    rep["n_devices"] = n_devices
+    rep["hash"] = hashes[0]
+    rep["stable"] = len(set(hashes)) == 1
+    rep["spmd"] = True          # one program for every replica index
+    counts = primitive_counts(closed)
+    rep["psums"] = counts.get("psum", 0) + counts.get("psum2", 0)
+    rep["halo_plan"] = {"mode": tr._hplan.mode, "halo": tr._hplan.halo,
+                        "r_cap": tr._hplan.r_cap}
+
+    # donation: the mesh-dispatch jit must carry the aliasing annotation
+    # for params/opt (checked at the stablehlo level, as audit_donation)
+    step = tr._sharded_step_for(0)
+    batch = tr.stream.build(tr.stream.root_batches(0)[0], 0, 0)
+    text = jax.jit(step.mapped, donate_argnums=(0, 1)).lower(
+        tr.params, tr.opt_state, batch, tr._train_feats, tr.degrees,
+        1e-3, jax.random.key_data(jax.random.key(0)), tr.cache, 1.0,
+        tr._skips).as_text()
+    rep["donation_aliased"] = "tf.aliasing_output" in text
+    rep["ok"] = rep["ok"] and rep["stable"] and rep["donation_aliased"]
+    return rep
+
+
 def audit_all(graph=None) -> dict:
     """The full contract audit (the CLI's --jaxpr pass). `graph`
     defaults to the pinned `tiny` synthetic dataset — audits trace but
@@ -392,6 +469,9 @@ def audit_all(graph=None) -> dict:
         "device_order": audit_device_order(graph),
         "fused_build": audit_fused_build(graph),
         "train_step": audit_train_step(graph),
+        # 1-device mesh: the same SPMD program CI's forced-4-device dist
+        # job audits, traceable on the default single-device runner
+        "sharded_step": audit_sharded_step(graph),
     }
     report["ok"] = all(report[k]["ok"] for k in report if k != "ok")
     return report

@@ -59,7 +59,9 @@ def halo_gather(feats_local, ids, *, n_per_shard: int, r_cap: int,
     served = loc
 
     for h in range(1, halo + 1):
-        for sign in (1, -1):
+        # at h == D/2 both directions reach the SAME shard — visiting it
+        # twice would serve (and double) every row it owns
+        for sign in ((1,) if (2 * h) % D == 0 else (1, -1)):
             tgt = (me + sign * h) % D
             want = owner == tgt
             # up to r_cap request slots for this neighbor
@@ -119,6 +121,67 @@ def gather_for_policy(feats_local, ids, *, n_per_shard, r_cap, halo,
                            r_cap=r_cap, halo=halo, axis=axis)
     return global_gather(feats_local, ids, n_per_shard=n_per_shard,
                          axis=axis)
+
+
+def halo_gather_np(feats_shards, ids_shards, *, n_per_shard: int,
+                   r_cap: int, halo: int):
+    """Host-side mirror of `halo_gather` simulating ALL D shards at once.
+
+    feats_shards: (D, Ns, F); ids_shards: (D, K) global node ids (sentinel
+    >= Ns*D -> zero rows). Returns ((D, K, F) rows, (D,) dropped counts),
+    step-for-step identical to the on-device exchange — including the
+    stable argsort request packing and the r_cap truncation — so property
+    tests can sweep random graphs without spawning a device mesh, and one
+    subprocess test pins this mirror `==` the `shard_map` path.
+    """
+    import numpy as np
+
+    feats = np.asarray(feats_shards)
+    ids = np.asarray(ids_shards)
+    D, Ns, F = feats.shape
+    K = ids.shape[1]
+    n_total = Ns * D
+    valid = ids < n_total
+    owner = np.where(valid, ids // n_per_shard, D)
+
+    out = np.zeros((D, K, F), feats.dtype)
+    served = np.zeros((D, K), bool)
+    for me in range(D):
+        loc = owner[me] == me
+        lidx = np.where(loc, ids[me] - me * Ns, 0)
+        out[me] += np.where(loc[:, None], feats[me][lidx], 0)
+        served[me] = loc
+
+    for h in range(1, halo + 1):
+        # mirror of the device loop's h == D/2 dedup
+        for sign in ((1,) if (2 * h) % D == 0 else (1, -1)):
+            # every device's request packet for its (me + sign*h) neighbor
+            reqs = np.zeros((D, r_cap), np.int64)
+            pvalids = np.zeros((D, r_cap), bool)
+            poss = np.zeros((D, r_cap), np.int64)
+            for me in range(D):
+                tgt = (me + sign * h) % D
+                want = owner[me] == tgt
+                pos = np.argsort(~want, kind="stable")[:r_cap]
+                pvalid = want[pos]
+                reqs[me] = np.where(pvalid, ids[me][pos] - tgt * Ns, 0)
+                pvalids[me] = pvalid
+                poss[me] = pos
+            for me in range(D):
+                # ppermute fwd delivers device src's packet to
+                # (src + sign*h) % D — i.e. `me` receives from src below
+                src = (me - sign * h) % D
+                got_req, got_val = reqs[src], pvalids[src]
+                rows = feats[me][np.clip(got_req, 0, Ns - 1)]
+                rows = rows * got_val[:, None].astype(rows.dtype)
+                # rev returns the served rows to src
+                back, pvalid, pos = rows, pvalids[src], poss[src]
+                np.add.at(out[src], pos,
+                          np.where(pvalid[:, None], back, 0))
+                served[src][pos[pvalid]] = True
+
+    dropped = np.sum(valid & ~served, axis=1)
+    return out, dropped
 
 
 def collective_bytes_model(K: int, F: int, D: int, r_cap: int, halo: int,

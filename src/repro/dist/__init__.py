@@ -1,1 +1,16 @@
-"""Distributed-execution utilities (sharding rules, mesh contexts)."""
+"""Distributed-execution utilities (sharding rules, mesh contexts).
+
+`repro.dist.sharding` holds the generic FSDP×TP spec machinery (LM
+side); `repro.dist.gnn` is the data-parallel GNN path: community-
+partitioned feature sharding, per-epoch halo planning, the sharded
+batch stream and the psum-reduced `shard_map` train step. `gnn` is
+imported lazily (via this module's `__getattr__`) so importing
+`repro.dist` stays cheap for LM-only consumers.
+"""
+
+
+def __getattr__(name):
+    if name in ("gnn", "sharding"):
+        import importlib
+        return importlib.import_module(f"repro.dist.{name}")
+    raise AttributeError(f"module 'repro.dist' has no attribute {name!r}")

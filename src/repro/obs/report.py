@@ -189,13 +189,21 @@ def epoch_rollups(events: List[dict]) -> List[Dict]:
     the epoch's last train step: the only sanctioned sync placement is
     the epoch/checkpoint boundary, which by construction begins with (or
     nests inside) the final step of the epoch. An epoch with no steps
-    (resume landed exactly on a boundary) cannot have mid-epoch syncs."""
+    (resume landed exactly on a boundary) cannot have mid-epoch syncs.
+
+    Envelopes are judged PER PID: a multi-replica trace (one pid per
+    replica, `trace.Tracer.for_replica`) carries one "epoch" envelope
+    per replica, and each is rolled up against its own pid's events
+    only — rank 0 being clean never masks a mid-epoch sync on rank 1,
+    and another replica's step cannot launder a sync as boundary-placed
+    (the gate ISSUE 10's per-replica fixtures pin)."""
     out = []
     for ep in sorted(_spans(events, "loop", "epoch"),
                      key=lambda ev: ev["ts"]):
         lo, hi = ep["ts"], ep["ts"] + ep["dur"]
         inside = [ev for ev in _spans(events)
-                  if lo <= ev["ts"] <= hi and ev is not ep]
+                  if lo <= ev["ts"] <= hi and ev is not ep
+                  and ev.get("pid") == ep.get("pid")]
         steps = [ev for ev in inside if ev.get("cat") == "step"]
         # no steps at all (resume landed on a boundary): everything in
         # the envelope IS the boundary, so nothing can be mid-epoch
@@ -209,6 +217,7 @@ def epoch_rollups(events: List[dict]) -> List[Dict]:
             e["count"] += 1
             e["total_s"] += ev["dur"] / 1e6
         out.append({"epoch": ep.get("args", {}).get("epoch"),
+                    "pid": ep.get("pid"),
                     "start_s": lo / 1e6, "dur_s": ep["dur"] / 1e6,
                     "n_steps": len(steps),
                     "spans": rollup,
@@ -242,4 +251,15 @@ def analyze(events: List[dict]) -> Dict:
         "sync_sites": sync_sites(events),
         "epochs": epochs,
         "mid_epoch_sync_count": sum(e["mid_epoch_syncs"] for e in epochs),
+        # per-pid gate: every replica's trace must be clean, not just
+        # rank 0's — a nonzero entry names the offending pid directly
+        "mid_epoch_sync_by_pid": _by_pid(epochs),
     }
+
+
+def _by_pid(epochs: List[Dict]) -> Dict:
+    out: Dict[str, int] = {}
+    for e in epochs:
+        k = str(e.get("pid"))
+        out[k] = out.get(k, 0) + e["mid_epoch_syncs"]
+    return out

@@ -160,6 +160,19 @@ class Tracer:
                     "pid": self.pid, "tid": threading.get_ident(),
                     "s": "t", "args": args})
 
+    def for_replica(self, r: int) -> "_ReplicaView":
+        """A pid-view of this tracer for mesh replica `r`: events emitted
+        through it carry a pid distinct from the host process (and from
+        every other replica), so each replica lays out as its own
+        Perfetto process track and `obs.report`'s per-pid mid-epoch-sync
+        gate judges each replica's timeline separately. The first use of
+        a replica emits its "M" process_name header."""
+        views = self.__dict__.setdefault("_replica_views", {})
+        view = views.get(r)
+        if view is None:
+            view = views[r] = _ReplicaView(self, r)
+        return view
+
     # -- inspection / persistence -------------------------------------------
     def events(self) -> List[dict]:
         """All events emitted so far (including already-flushed ones),
@@ -177,6 +190,40 @@ class Tracer:
 
     def close(self) -> None:
         self.flush()
+
+
+class _ReplicaView:
+    """Per-replica pid facade over a `Tracer` (see `Tracer.for_replica`).
+
+    Spans are emitted with EXPLICIT (ts, dur): replica timelines are
+    reconstructed after the fact from per-step host dispatch timestamps
+    plus the sharded step's per-replica aux outputs
+    (`dist.gnn.ReplicaTraceEmitter`), never timed live — an SPMD step is
+    one dispatch for all replicas, so live per-replica wall timing does
+    not exist. Emission itself never syncs the device."""
+    __slots__ = ("_tracer", "replica", "pid")
+
+    def __init__(self, tracer: Tracer, r: int):
+        self._tracer = tracer
+        self.replica = r
+        # distinct from the host pid and from every other replica view
+        self.pid = tracer.pid * 1000 + r + 1
+        tracer._emit({"name": "process_name", "cat": "__metadata",
+                      "ph": "M", "ts": 0, "pid": self.pid, "tid": 0,
+                      "args": {"name": f"replica {r}", "replica": r}})
+
+    def emit_span(self, name: str, cat: str, ts: float, dur: float,
+                  **args) -> None:
+        self._tracer._emit({"name": name, "cat": cat, "ph": "X",
+                            "ts": ts, "dur": dur, "pid": self.pid,
+                            "tid": 0, "args": dict(args,
+                                                   replica=self.replica)})
+
+    def instant(self, name: str, cat: str = "host", **args) -> None:
+        self._tracer._emit({"name": name, "cat": cat, "ph": "i",
+                            "ts": _now_us(), "pid": self.pid, "tid": 0,
+                            "s": "t",
+                            "args": dict(args, replica=self.replica)})
 
 
 # ---------------------------------------------------------------------------

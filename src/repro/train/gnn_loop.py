@@ -59,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import featcache, sampling
+from repro.dist import gnn as dist_gnn
 from repro.featcache import dynamic as featcache_dynamic
 from repro.featcache.dynamic import DynamicCacheState
 from repro.obs import trace as obs_trace
@@ -186,7 +187,7 @@ class GNNTrainer:
                  calibrator: Optional[CapsCalibrator] = None,
                  cache=None, cache_capacity: Optional[int] = None,
                  cache_frac: float = 0.2, pipeline: str = "sync",
-                 guard=None):
+                 guard=None, mesh=None):
         self.graph = graph
         self.cfg = cfg
         self.tcfg = tcfg
@@ -252,8 +253,38 @@ class GNNTrainer:
         if pipeline not in ("sync", "async"):
             raise ValueError(
                 f"pipeline must be 'sync' or 'async', got {pipeline!r}")
+        # mesh=None is the classic single-device path. A 1-D ("shard",)
+        # Mesh switches on data-parallel training (repro.dist.gnn): the
+        # feature matrix is community-partitioned across the mesh, the
+        # stream deals each global root batch as per-replica slices, and
+        # the jitted step runs under shard_map with psum'd grads. The
+        # global epoch order, cursor and checkpoints are unchanged — a
+        # 1-replica mesh is bit-identical to mesh=None.
+        self.mesh = mesh
+        self.splan = None
+        self._hplan = None
+        self._hplan_epoch = -1
+        self._step_cache = {}           # HaloPlan -> jitted sharded step
+        self._remitter = None           # per-replica trace re-emitter
         stream_kwargs = {}
-        if pipeline == "async":
+        if mesh is not None:
+            if pipeline != "sync":
+                raise ValueError(
+                    "mesh training requires pipeline='sync' (the async "
+                    "prefetcher is single-device for now)")
+            if isinstance(self.cache, DynamicCacheState):
+                raise ValueError(
+                    "mesh training supports a static CachePlan only; "
+                    "dynamic CLOCK admission is single-device for now")
+            d = mesh.shape[dist_gnn.AXIS]
+            if tcfg.batch_size % d:
+                raise ValueError(
+                    f"batch_size {tcfg.batch_size} not divisible by the "
+                    f"{d}-replica mesh")
+            self.splan = dist_gnn.community_shard_plan(graph, d)
+            stream_cls = dist_gnn.ShardedBatchStream
+            stream_kwargs.update(mesh=mesh, plan=self.splan)
+        elif pipeline == "async":
             from repro.pipeline import AsyncBatchStream
             stream_cls = AsyncBatchStream
             # watchdog restarts surface in THIS trainer's resilience meter
@@ -265,6 +296,20 @@ class GNNTrainer:
             graph, self.policy, tcfg.batch_size, self.fanouts, self.caps,
             seed=seed, device_graph=self.g, labels=self.labels,
             cache=self.cache, **stream_kwargs)
+        if mesh is not None:
+            # model/opt state is replicated; features live sharded with
+            # the replicated id->slot map riding alongside them
+            self._train_feats = {
+                "local": self.splan.shard_features(graph.features, mesh),
+                "pos": self.splan.device_pos(mesh)}
+            self.params = dist_gnn.replicate(self.params, mesh)
+            self.opt_state = dist_gnn.replicate(self.opt_state, mesh)
+            self._skips = dist_gnn.replicate(self._skips, mesh)
+            if self.cache is not None:
+                self._set_cache(dist_gnn.replicate(self.cache, mesh))
+            self.train_step = self._sharded_train_step
+        else:
+            self._train_feats = self.feats
         # epoch whose boundary refill is still pending (dynamic cache);
         # travels in checkpoint `extra` so resume never double-refills
         self._cache_epoch = self.stream.cursor.epoch
@@ -312,12 +357,52 @@ class GNNTrainer:
         self._cache_epoch = int(extra.get("cache_epoch",
                                           self.stream.cursor.epoch))
 
+    def _shardings(self):
+        """Checkpoint-restore shardings: replicated-on-mesh leaves in
+        mesh mode (so a sharded-run resume lands its state back on the
+        mesh, not on one device), None otherwise."""
+        if self.mesh is None:
+            return None
+        return dist_gnn.state_shardings(self._state(), self.mesh)
+
     def _try_resume(self) -> None:
         step, tree, extra = ckpt.restore_latest(
-            self.ckpt_dir, self._state(), on_corrupt=self._on_corrupt_ckpt)
+            self.ckpt_dir, self._state(), shardings=self._shardings(),
+            on_corrupt=self._on_corrupt_ckpt)
         if step is None:
             return
         self._apply_restored(step, tree, extra)
+
+    # -- sharded step (repro.dist.gnn) --------------------------------------
+    def _sharded_step_for(self, epoch: int):
+        """The jitted sharded train step for `epoch`. The halo exchange
+        budget is re-planned at every epoch boundary from that epoch's
+        root order; the compiled step is cached per `HaloPlan`, so
+        epochs whose plans agree (the steady state — COMM-RAND's orders
+        shuffle blocks, not community membership) reuse one executable
+        and never retrace (the recompile-stability contract
+        `analysis.jaxpr_audit.audit_sharded_step` gates)."""
+        if self._hplan_epoch != epoch:
+            self._hplan = dist_gnn.plan_halo(
+                self.splan, self.graph, self.fanouts, self.caps[-1],
+                self.stream.root_batches(epoch))
+            self._hplan_epoch = epoch
+            self._remitter = dist_gnn.ReplicaTraceEmitter(
+                self.splan.n_shards, self._hplan, self.caps[-1],
+                self.graph.feat_dim)
+        step = self._step_cache.get(self._hplan)
+        if step is None:
+            step = self._step_cache[self._hplan] = \
+                dist_gnn.make_sharded_steps(
+                    self.cfg, self.tcfg, self.mesh, self.splan,
+                    self._hplan)
+        return step
+
+    def _sharded_train_step(self, params, opt_state, batch, feats, degrees,
+                            lr, key, cache, poison, skips):
+        return self._sharded_step_for(self.stream.cursor.epoch)(
+            params, opt_state, batch, feats, degrees, lr, key, cache,
+            poison, skips)
 
     # -- batch building -----------------------------------------------------
     def _dropout_key(self):
@@ -335,13 +420,18 @@ class GNNTrainer:
         roots = np.full(self.tcfg.batch_size, -1, np.int64)
         roots[:min(len(self.graph.train_ids), 8)] = \
             self.graph.train_ids[:8]
-        b = mb.build_batch(jax.random.key(0), self.g,
-                           jnp.asarray(roots, jnp.int32), self.labels,
-                           self.fanouts, self.caps, self.sampler)
+        if self.mesh is not None:
+            # the sharded stream stacks per-replica sub-batches; going
+            # through it compiles the same build the epoch will use
+            b = self.stream.build(roots, self.stream.cursor.epoch, 0)
+        else:
+            b = mb.build_batch(jax.random.key(0), self.g,
+                               jnp.asarray(roots, jnp.int32), self.labels,
+                               self.fanouts, self.caps, self.sampler)
         self.params, self.opt_state, *_ = self.train_step(
-            self.params, self.opt_state, b, self.feats, self.degrees,
-            0.0, jax.random.key(0), self.cache, 1.0,
-            jnp.zeros((), jnp.int32))
+            self.params, self.opt_state, b, self._train_feats,
+            self.degrees, 0.0, jax.random.key(0), self.cache, 1.0,
+            self._skips)
         be = mb.build_batch(jax.random.key(0), self.g,
                             jnp.asarray(roots, jnp.int32), self.labels,
                             self.fanouts, self.eval_caps,
@@ -370,7 +460,7 @@ class GNNTrainer:
                 poison = float("nan")
             self.params, self.opt_state, loss, ok, self._skips, hits, \
                 misses, refs = self.train_step(
-                    self.params, self.opt_state, batch, self.feats,
+                    self.params, self.opt_state, batch, self._train_feats,
                     self.degrees, lr, self._dropout_key(), self.cache,
                     poison, self._skips)
             # sync-free device timing: record the dispatch timestamp +
@@ -383,7 +473,18 @@ class GNNTrainer:
                 self._pending_stats.append((hits, misses))
             if self.guard is not None:
                 self._pending_ok.append((ok, self.global_step))
-            if refs is not None:
+            if isinstance(refs, dict):
+                # sharded step: the slot carries the per-replica aux
+                # payload (loss share / halo drops / cache counters as
+                # un-synced (D,) arrays), not dynamic-cache refs — queue
+                # it for the per-replica trace re-emission at the epoch
+                # boundary drain
+                if self._remitter is not None and \
+                        obs_trace.current() is not None:
+                    self._remitter.note(
+                        t0 * 1e6, (time.perf_counter() - t0) * 1e6,
+                        step0, refs)
+            elif refs is not None:
                 self._set_cache(
                     featcache_dynamic.with_refs(self.cache, refs))
             self.global_step += 1
@@ -508,7 +609,7 @@ class GNNTrainer:
 
         def _restore():
             step, tree, extra = ckpt.restore_latest(
-                self.ckpt_dir, self._state(),
+                self.ckpt_dir, self._state(), shardings=self._shardings(),
                 on_corrupt=self._on_corrupt_ckpt)
             if step is None:
                 raise StepFailure(
@@ -551,6 +652,11 @@ class GNNTrainer:
                 # the device window closes only AFTER the drain above —
                 # the timer itself never syncs
                 self._dev_timer.flush("epoch")
+                if self._remitter is not None:
+                    # per-replica Perfetto tracks, reconstructed from the
+                    # queued aux (device already drained, so the host
+                    # transfers here cost no new sync)
+                    self._remitter.flush(obs_trace.current(), e0)
             dt = time.perf_counter() - t0
             self._flush_cache_stats()
             self._guard_check(force=True)  # epoch boundary: exact skips
@@ -564,8 +670,11 @@ class GNNTrainer:
         # analysis: allow[no-host-sync-in-hot-path] -- post-flush metric reduction at the epoch boundary; device is already drained
         return {"loss": float(np.mean([float(l) for l in losses])),
                 "time": dt,
+                # a sharded batch carries (D,) per-replica unique counts;
+                # np.asarray averages them (scalar-safe for mesh=None)
                 # analysis: allow[no-host-sync-in-hot-path] -- post-flush metric reduction at the epoch boundary; device is already drained
-                "uniq": float(np.mean([float(u) for u in uniq])),
+                "uniq": float(np.mean([np.asarray(u).mean()
+                                       for u in uniq])),
                 "cache_hit": ep["hit_rate"],
                 "cache_refill": ep["refills"],
                 "straggler": self.straggler.fraction_since(smark)}
@@ -583,6 +692,9 @@ class GNNTrainer:
             # analysis: allow[no-host-sync-in-hot-path] -- single batched sync at the END of the n-step run (see comment above: no per-step float)
             out = [float(l) for l in losses]
         self._dev_timer.flush("train_steps")
+        if self._remitter is not None:
+            self._remitter.flush(obs_trace.current(),
+                                 self.stream.cursor.epoch)
         return out
 
     def evaluate(self, ids: np.ndarray) -> Dict:

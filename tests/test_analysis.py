@@ -382,3 +382,19 @@ def test_cli_lint_only(tmp_path):
     for rule, entry in rep["lint"]["rules"].items():
         for w in entry["waivers"]:
             assert w["justification"], (rule, w)
+
+
+def test_sharded_step_audit(tiny_graph):
+    """The data-parallel (shard_map) step under the same contract:
+    callback-free, f64-free, grads psum-reduced, donation aliased in the
+    lowering, ONE jaxpr hash across poison/lr/key/batch/fresh-trainer."""
+    rep = ja.audit_sharded_step(tiny_graph)
+    assert rep["callbacks"] == 0
+    assert rep["f64_casts"] == 0 and rep["f64_avals"] == 0
+    assert rep["stable"], rep
+    assert rep["spmd"] and rep["n_devices"] == 1
+    assert rep["psums"] >= 1            # grads + loss + mask count
+    assert rep["halo_plan"]["mode"] in ("halo", "global")
+    assert rep["halo_plan"]["halo"] == 0      # 1-device ring
+    assert rep["donation_aliased"]
+    assert rep["ok"]

@@ -51,3 +51,78 @@ def test_vocab_padding():
     assert get_config("whisper-large-v3").padded_vocab % 256 == 0
     assert get_config("hymba-1.5b").padded_vocab % 256 == 0
     assert get_config("gemma3-27b").padded_vocab == 262144  # already aligned
+
+
+# ---------------------------------------------------------------------------
+# GNN side (repro.dist.gnn): the community-sharded artifacts carry the
+# layouts the data-parallel trainer relies on
+# ---------------------------------------------------------------------------
+def test_gnn_feature_and_state_shardings(tiny_graph):
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.dist import gnn as dist_gnn
+    from repro.models.gnn.models import init_gnn
+    from repro.configs.base import GNNConfig
+
+    mesh = dist_gnn.make_gnn_mesh(1)
+    plan = dist_gnn.community_shard_plan(tiny_graph, 1)
+    feats = plan.shard_features(tiny_graph.features, mesh)
+    assert feats.sharding == NamedSharding(mesh, P("shard", None))
+    # 1-shard layout is the identity: rows are bit-copies in id order
+    np.testing.assert_array_equal(np.asarray(feats),
+                                  np.asarray(tiny_graph.features))
+    pos = plan.device_pos(mesh)
+    assert pos.sharding.is_fully_replicated
+
+    cfg = GNNConfig("t", "sage", 2, 16, tiny_graph.feat_dim,
+                    tiny_graph.num_classes, fanout=(5, 5))
+    params = init_gnn(cfg, jax.random.key(0))
+    rep = dist_gnn.replicate(params, mesh)
+    for leaf in jax.tree.leaves(rep):
+        assert leaf.sharding.is_fully_replicated
+    # state_shardings mirrors the tree with replicated NamedShardings
+    # (what sharded checkpoint restore device_puts with)
+    shards = dist_gnn.state_shardings(params, mesh)
+    assert jax.tree.structure(shards) == jax.tree.structure(params)
+    for s in jax.tree.leaves(
+            shards, is_leaf=lambda x: isinstance(x, NamedSharding)):
+        assert s == NamedSharding(mesh, P())
+
+
+def test_sharded_batch_stream_layout(tiny_graph):
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.dist import gnn as dist_gnn
+
+    mesh = dist_gnn.make_gnn_mesh(1)
+    plan = dist_gnn.community_shard_plan(tiny_graph, 1)
+    stream = dist_gnn.ShardedBatchStream(
+        tiny_graph, "comm_rand", 32, (5, 5), (512, 1024), seed=3,
+        mesh=mesh, plan=plan)
+    batch = stream.build(stream.root_batches(0)[0], 0, 0)
+    sh = NamedSharding(mesh, P("shard"))
+    for leaf in jax.tree.leaves(batch):
+        assert leaf.shape[0] == 1            # leading shard axis
+        assert leaf.sharding == sh
+    # the single replica's sub-batch ids equal the single-device build's
+    from repro.batching.stream import BatchStream
+    base = BatchStream(tiny_graph, "comm_rand", 32, (5, 5), (512, 1024),
+                       seed=3)
+    ref = base.build(base.root_batches(0)[0], 0, 0)
+    np.testing.assert_array_equal(np.asarray(batch.node_mask[0]),
+                                  np.asarray(ref.node_mask))
+    np.testing.assert_array_equal(np.asarray(batch.labels[0]),
+                                  np.asarray(ref.labels))
+
+
+def test_gnn_mesh_too_many_shards_raises():
+    import pytest
+
+    from repro.dist import gnn as dist_gnn
+
+    with pytest.raises(RuntimeError, match="devices"):
+        dist_gnn.make_gnn_mesh(4096)

@@ -208,6 +208,101 @@ def test_epoch_rollup_empty_epoch_has_no_mid_syncs():
 
 
 # ---------------------------------------------------------------------------
+# per-replica (per-pid) rollups: one Perfetto track per mesh replica
+# ---------------------------------------------------------------------------
+def _xp(pid, name, cat, ts, dur, **args):
+    ev = _x(name, cat, ts, dur, **args)
+    ev["pid"] = pid
+    return ev
+
+
+def test_per_pid_gate_fails_on_dirty_rank1_even_when_rank0_clean():
+    """Two replica tracks over the same wall window. Rank 0 (pid 7) is
+    clean. Rank 1 (pid 1001) has a sync at ts=50 — AFTER rank 0's last
+    step start (20), so a pid-blind rollup would call it
+    boundary-placed, but BEFORE rank 1's own last step (80): judged per
+    pid it is mid-epoch and the gate must fail."""
+    evs = [
+        # rank 0: both syncs at/after its last step start -> boundary
+        _xp(7, "epoch", "loop", 0, 100, epoch=0),
+        _xp(7, "train_step", "step", 0, 15, step=0),
+        _xp(7, "train_step", "step", 20, 15, step=1),
+        _xp(7, "epoch_flush", "sync", 36, 4, epoch=0),
+        # rank 1: same epoch envelope, later final step, early sync
+        _xp(1001, "epoch", "loop", 0, 100, epoch=0),
+        _xp(1001, "train_step", "step", 0, 15, step=0),
+        _xp(1001, "halo_wait", "sync", 50, 5),
+        _xp(1001, "train_step", "step", 80, 15, step=1),
+        _xp(1001, "epoch_flush", "sync", 96, 4, epoch=0),
+    ]
+    eps = {ep["pid"]: ep for ep in R.epoch_rollups(evs)}
+    assert set(eps) == {7, 1001}
+    # rank 0 judged against ITS OWN steps only: rank 1's ts=80 step must
+    # not drag rank 0's flush (ts=36) into mid-epoch territory...
+    assert eps[7]["mid_epoch_syncs"] == 0
+    assert eps[7]["n_steps"] == 2
+    assert eps[7]["spans"]["train_step"]["count"] == 2  # not 4
+    # ...and rank 1's early sync cannot hide behind rank 0's clean track
+    assert eps[1001]["mid_epoch_syncs"] == 1
+    assert eps[1001]["mid_epoch_sync_names"] == ["halo_wait"]
+    rep = R.analyze(evs)
+    assert rep["mid_epoch_sync_count"] == 1          # the gate fails
+    assert rep["mid_epoch_sync_by_pid"] == {"7": 0, "1001": 1}
+
+
+def test_replica_trace_emitter_tracks_pass_per_pid_gate():
+    """`dist.gnn.ReplicaTraceEmitter` + `Tracer.for_replica` end to end
+    on synthetic aux: distinct pid per replica, per-replica loss shares
+    on the spans, rollup instants with the halo-bytes model, and every
+    replica's reconstructed timeline passes the per-pid gate."""
+    from repro.dist import gnn as dist_gnn
+    hplan = dist_gnn.HaloPlan("halo", 1, 8)
+    em = dist_gnn.ReplicaTraceEmitter(2, hplan, 8, 4)
+    aux0 = {"loss": np.array([0.5, 0.25]), "dropped": np.array([0, 3]),
+            "hits": np.array([2, 0]), "misses": np.array([1, 4])}
+    aux1 = {"loss": np.array([0.4, 0.2]), "dropped": np.array([0, 1]),
+            "hits": np.array([5, 0]), "misses": np.array([0, 2])}
+    with T.enabled(None) as tr:
+        em.note(0.0, 10.0, 0, aux0)
+        em.note(20.0, 10.0, 1, aux1)
+        em.flush(tr, epoch=0)
+        assert em._steps == [] and em._aux == []     # drained
+        evs = tr.events()
+    pids = {e["pid"] for e in evs}
+    assert len(pids) == 2 and tr.pid not in pids
+    steps = [e for e in evs if e["name"] == "train_step"]
+    assert len(steps) == 4                           # 2 steps x 2 replicas
+    by_r = {}
+    for e in steps:
+        by_r.setdefault(e["args"]["replica"], []).append(e)
+    assert by_r[0][0]["args"]["loss_share"] == pytest.approx(0.5)
+    assert by_r[1][1]["args"]["loss_share"] == pytest.approx(0.2)
+    roll = {e["args"]["replica"]: e["args"] for e in evs
+            if e["name"] == "replica_rollup"}
+    assert roll[1]["halo_dropped"] == 4
+    assert roll[0]["cache_hits"] == 7 and roll[0]["cache_misses"] == 1
+    assert roll[0]["halo_bytes"] == 2 * hplan.bytes_per_gather(8, 4, 2)
+    # each replica's track is a well-formed epoch that passes the gate
+    eps = R.epoch_rollups(evs)
+    assert len(eps) == 2
+    for ep in eps:
+        assert ep["n_steps"] == 2 and ep["mid_epoch_syncs"] == 0
+    rep = R.analyze(evs)
+    assert rep["mid_epoch_sync_count"] == 0
+    assert set(rep["mid_epoch_sync_by_pid"].values()) == {0}
+
+
+def test_replica_emitter_without_tracer_is_noop():
+    from repro.dist import gnn as dist_gnn
+    em = dist_gnn.ReplicaTraceEmitter(2, dist_gnn.HaloPlan("halo", 0, 8),
+                                      8, 4)
+    em.note(0.0, 1.0, 0, {"loss": np.zeros(2), "dropped": np.zeros(2),
+                          "hits": np.zeros(2), "misses": np.zeros(2)})
+    em.flush(None, epoch=0)                          # no tracer: swallowed
+    assert em._steps == []
+
+
+# ---------------------------------------------------------------------------
 # metrics hub
 # ---------------------------------------------------------------------------
 def test_counter_gauge_histogram_primitives():
